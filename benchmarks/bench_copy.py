@@ -1,0 +1,30 @@
+"""Paper Fig. 1: read/write kernel bandwidth over data sizes."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import memcpy_gbps, row, time_fn
+from repro.kernels import ops
+
+
+def run() -> list[str]:
+    out = [f"# memcpy baseline: {memcpy_gbps():.2f} GB/s"]
+    copy = jax.jit(ops.copy)
+    for mb in (4, 16, 64, 256):
+        n = mb * 1024 * 1024 // 4
+        x = jnp.asarray(np.random.default_rng(0).standard_normal(n), jnp.float32)
+        x = x.reshape(-1, 1024)
+        t = time_fn(copy, x)
+        out.append(row(f"copy_{mb}MB", t, 2 * n * 4))
+    # ranged read
+    x = jnp.asarray(np.random.default_rng(0).standard_normal((65536, 1024)), jnp.float32)
+    t = time_fn(jax.jit(lambda a: ops.copy_range(a, jnp.int32(123), 32768)), x)
+    out.append(row("copy_range_128MB", t, 2 * 32768 * 1024 * 4))
+    # index-set gather (random permutation rows)
+    idx = jnp.asarray(np.random.default_rng(1).permutation(65536), jnp.int32)
+    t = time_fn(jax.jit(ops.gather_rows), x, idx)
+    out.append(row("gather_rows_256MB", t, 2 * x.size * 4))
+    return out

@@ -1,0 +1,29 @@
+"""Paper Table 3: interlace / de-interlace for n = 4..9 arrays."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import row, time_fn
+from repro.kernels import ops
+
+
+def run() -> list[str]:
+    out = []
+    rng = np.random.default_rng(0)
+    length = 8 * 1024 * 1024  # 32 MB per array (scaled from the paper's 0.27 GB)
+    for n in (4, 5, 6, 7, 8, 9):
+        arrays = [
+            jnp.asarray(rng.standard_normal(length), jnp.float32) for _ in range(n)
+        ]
+        nbytes = 2 * n * length * 4
+        il = jax.jit(lambda *a: ops.interlace(list(a)))
+        t = time_fn(il, *arrays)
+        out.append(row(f"interlace_n{n}", t, nbytes))
+        merged = il(*arrays)
+        dl = jax.jit(lambda x, n=n: ops.deinterlace(x, n))
+        t = time_fn(dl, merged)
+        out.append(row(f"deinterlace_n{n}", t, nbytes))
+    return out

@@ -1,0 +1,32 @@
+"""Beyond-paper: MoE dispatch as the index-set rearrangement (DESIGN §4).
+
+Compares the gather-kernel ('sort') dispatch against the one-hot-einsum
+('dense') dispatch — same semantics, different data-movement strategy.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import row, time_fn
+from repro import configs
+from repro.models import moe
+
+
+def run() -> list[str]:
+    cfg = configs.get_config("deepseek-moe-16b-smoke").with_(d_model=512)
+    key = jax.random.PRNGKey(0)
+    p = moe.moe_init(key, cfg)
+    x = jax.random.normal(key, (8, 512, cfg.d_model), jnp.float32).astype(cfg.np_dtype)
+    t_tokens = 8 * 512
+    # bytes: tokens gathered in + expert io + gathered back (rough lower bound)
+    nbytes = 4 * t_tokens * cfg.d_model * 2 * cfg.moe.top_k
+    out = []
+    for mode in ("dense", "sort"):
+        cfg_m = cfg.with_(moe=cfg.moe.__class__(**{**cfg.moe.__dict__, "dispatch": mode}))
+        fn = jax.jit(lambda a, c=cfg_m: moe.moe_apply(p, c, a)[0])
+        t = time_fn(fn, x)
+        out.append(row(f"moe_dispatch_{mode}", t, nbytes))
+    return out

@@ -1,0 +1,28 @@
+"""Paper Table 1: 3D permute, all 6 orders, 128x256x512 fp32."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import row, time_fn
+from repro.core import layout
+from repro.kernels import ops
+
+ORDERS = [[0, 1, 2], [0, 2, 1], [1, 0, 2], [1, 2, 0], [2, 0, 1], [2, 1, 0]]
+
+
+def run() -> list[str]:
+    x = jnp.asarray(
+        np.random.default_rng(0).standard_normal((128, 256, 512)), jnp.float32
+    )
+    nbytes = 2 * x.size * 4
+    out = []
+    for order in ORDERS:
+        perm = layout.paper_order_to_perm(order)
+        fn = jax.jit(lambda a, p=perm: ops.permute(a, p))
+        t = time_fn(fn, x)
+        mode = layout.canonicalize(x.shape, perm).mode
+        out.append(row(f"permute3d_{''.join(map(str, order))}", t, nbytes, f"[{mode}]"))
+    return out

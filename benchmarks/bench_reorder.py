@@ -1,0 +1,39 @@
+"""Paper Table 2: generic reorder on 3-/4-/5-D data (paper's exact rows)."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import row, time_fn
+from repro.core import layout
+from repro.kernels import ops
+
+# (paper order vector, shape) — Table 2 rows
+ROWS = [
+    ([1, 0, 2], (256, 256, 256)),
+    ([1, 0, 2, 3], (256, 256, 256, 1)),
+    ([3, 2, 0, 1], (256, 256, 1, 256)),
+    ([3, 0, 2, 1, 4], (256, 16, 1, 256, 16)),
+]
+
+
+def run() -> list[str]:
+    out = []
+    rng = np.random.default_rng(0)
+    for order, shape in ROWS:
+        x = jnp.asarray(rng.standard_normal(shape), jnp.float32)
+        perm = layout.paper_order_to_perm(order)
+        fn = jax.jit(lambda a, p=perm: ops.permute(a, p))
+        t = time_fn(fn, x)
+        canon = layout.canonicalize(shape, perm)
+        out.append(
+            row(
+                f"reorder_{'-'.join(map(str, order))}",
+                t,
+                2 * x.size * 4,
+                f"[{canon.mode}, coalesced {len(canon.shape)}D]",
+            )
+        )
+    return out

@@ -1,0 +1,35 @@
+"""Roofline table from the dry-run records (deliverable (g)).
+
+Reads runs/dryrun/single/*.json and prints the three terms per cell.
+Run the dry-run first:  PYTHONPATH=src python -m repro.launch.dryrun
+"""
+
+from __future__ import annotations
+
+import json
+from pathlib import Path
+
+DRYRUN = Path("runs/dryrun/single")
+
+
+def run() -> list[str]:
+    out = []
+    if not DRYRUN.exists():
+        return ["# no dry-run records yet (run repro.launch.dryrun)"]
+    for f in sorted(DRYRUN.glob("*.json")):
+        d = json.loads(f.read_text())
+        cell = f"{d['arch']}--{d['cell']}"
+        if d.get("status") == "skipped":
+            out.append(f"{cell},skipped,{d.get('reason', '')[:60]}")
+            continue
+        if d.get("status") != "ok" or "roofline" not in d:
+            out.append(f"{cell},{d.get('status')},{d.get('error', '')[:80]}")
+            continue
+        r = d["roofline"]
+        out.append(
+            f"{cell},{r['step_time_s']*1e6:.0f},"
+            f"compute={r['compute_s']*1e3:.1f}ms memory={r['memory_s']*1e3:.1f}ms "
+            f"collective={r['collective_s']*1e3:.1f}ms bottleneck={r['bottleneck']} "
+            f"mfu_bound={r['mfu_bound']:.3f} useful_ratio={r['useful_flops_ratio']:.2f}"
+        )
+    return out

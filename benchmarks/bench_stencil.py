@@ -1,0 +1,26 @@
+"""Paper Fig. 2 / Table 4: 2-D FD stencil, orders I..IV, 4096^2 fp32."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import row, time_fn
+from repro.core import stencil as st
+
+
+def run() -> list[str]:
+    out = []
+    x = jnp.asarray(np.random.default_rng(0).standard_normal((4096, 4096)), jnp.float32)
+    nbytes = 2 * x.size * 4  # in + out (the stencil reads each cell ~1x via halo reuse)
+    for order in (1, 2, 3, 4):
+        s = st.fd_laplacian(order)
+        fn = jax.jit(lambda a, s=s: s(a))
+        t = time_fn(fn, x)
+        out.append(row(f"fd_stencil_order{order}", t, nbytes, f"[{len(s.offsets)}pt]"))
+    # generic functor variant (paper's template mechanism): box blur
+    blur = st.box_blur(1)
+    t = time_fn(jax.jit(lambda a: blur(a)), x)
+    out.append(row("box_blur_3x3", t, nbytes))
+    return out

@@ -1,0 +1,53 @@
+"""Benchmark harness utilities.
+
+The paper's metric is achieved bandwidth as a fraction of device-to-device
+``memcpy`` (77 GB/s on the C1060).  On this CPU container we reproduce the
+*methodology*: measure each op's achieved GB/s with the same timing loop
+used for the host memcpy baseline, and report the fraction.  TPU roofline
+numbers for the same ops come from the dry-run analysis (bench_roofline).
+"""
+
+from __future__ import annotations
+
+import time
+
+import jax
+import numpy as np
+
+
+def time_fn(fn, *args, warmup: int = 2, iters: int = 5) -> float:
+    """Best-of-iters seconds for fn(*args) with device sync."""
+    for _ in range(warmup):
+        r = fn(*args)
+        jax.block_until_ready(r)
+    best = float("inf")
+    for _ in range(iters):
+        t0 = time.perf_counter()
+        r = fn(*args)
+        jax.block_until_ready(r)
+        best = min(best, time.perf_counter() - t0)
+    return best
+
+
+_MEMCPY_CACHE: dict[int, float] = {}
+
+
+def memcpy_gbps(nbytes: int = 1 << 28) -> float:
+    """Host memcpy bandwidth — the baseline every kernel is normalized to
+    (the paper's cudaMemcpy d2d reference)."""
+    if nbytes not in _MEMCPY_CACHE:
+        src = np.empty(nbytes, np.uint8)
+        dst = np.empty_like(src)
+        best = float("inf")
+        for _ in range(5):
+            t0 = time.perf_counter()
+            np.copyto(dst, src)
+            best = min(best, time.perf_counter() - t0)
+        _MEMCPY_CACHE[nbytes] = 2 * nbytes / best / 1e9  # read + write
+    return _MEMCPY_CACHE[nbytes]
+
+
+def row(name: str, seconds: float, bytes_moved: int, note: str = "") -> str:
+    gbps = bytes_moved / seconds / 1e9
+    frac = gbps / memcpy_gbps()
+    return f"{name},{seconds*1e6:.1f},{gbps:.2f} GB/s ({frac*100:.0f}% of memcpy){(' ' + note) if note else ''}"

@@ -1,0 +1,49 @@
+"""Benchmark harness — one module per paper table/figure.
+
+  PYTHONPATH=src python -m benchmarks.run [--only copy,permute,...]
+
+Prints ``name,us_per_call,derived`` CSV per row (derived = achieved GB/s
+and fraction of host memcpy — the paper's normalization).
+"""
+
+from __future__ import annotations
+
+import argparse
+import sys
+import time
+
+SUITES = [
+    ("copy", "benchmarks.bench_copy", "Fig. 1 read/write kernels"),
+    ("permute", "benchmarks.bench_permute", "Table 1 3D permute"),
+    ("reorder", "benchmarks.bench_reorder", "Table 2 generic reorder"),
+    ("interlace", "benchmarks.bench_interlace", "Table 3 interlace/deinterlace"),
+    ("stencil", "benchmarks.bench_stencil", "Fig. 2/Table 4 2D FD stencil"),
+    ("moe_dispatch", "benchmarks.bench_moe_dispatch", "beyond-paper MoE dispatch"),
+    ("roofline", "benchmarks.bench_roofline", "dry-run roofline table"),
+]
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--only", default="")
+    args = ap.parse_args()
+    only = set(args.only.split(",")) if args.only else None
+
+    print("name,us_per_call,derived")
+    for key, module, title in SUITES:
+        if only and key not in only:
+            continue
+        t0 = time.time()
+        print(f"# === {title} ({module}) ===", flush=True)
+        try:
+            mod = __import__(module, fromlist=["run"])
+            for line in mod.run():
+                print(line, flush=True)
+        except Exception as e:  # noqa: BLE001 — keep the harness running
+            print(f"# {key} FAILED: {type(e).__name__}: {e}", file=sys.stderr)
+            print(f"{key},error,{type(e).__name__}")
+        print(f"# ({time.time()-t0:.1f}s)", flush=True)
+
+
+if __name__ == "__main__":
+    main()

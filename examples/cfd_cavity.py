@@ -1,0 +1,101 @@
+"""2-D lid-driven cavity flow solver on the stencil library — the paper's
+own application demo (§IV / ref [12], their Navier-Stokes poster).
+
+Vorticity-streamfunction formulation:
+    w_t + u w_x + v w_y = (1/Re) lap(w)
+    lap(psi) = -w ;  u = psi_y ; v = -psi_x
+Jacobi iterations for the Poisson solve, central differences for
+advection/diffusion — every operator is a library Stencil.
+
+  PYTHONPATH=src python examples/cfd_cavity.py [--n 128 --re 100 --steps 200]
+"""
+
+from __future__ import annotations
+
+import argparse
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.stencil import Stencil
+
+# library stencils (paper §III-D objects)
+LAP = Stencil(((0, 0), (1, 0), (-1, 0), (0, 1), (0, -1)), (-4.0, 1.0, 1.0, 1.0, 1.0))
+DDX = Stencil(((0, 1), (0, -1)), (0.5, -0.5))
+DDY = Stencil(((1, 0), (-1, 0)), (0.5, -0.5))
+JACOBI = Stencil(((1, 0), (-1, 0), (0, 1), (0, -1)), (0.25, 0.25, 0.25, 0.25))
+
+
+def step(w, psi, *, re: float, dt: float, h: float, u_lid: float, jacobi_iters: int):
+    # Poisson: lap(psi) = -w  (Jacobi; interior only, psi=0 on walls)
+    def jac(psi, _):
+        psi = JACOBI(psi) + (h * h / 4.0) * w
+        psi = psi.at[0, :].set(0).at[-1, :].set(0).at[:, 0].set(0).at[:, -1].set(0)
+        return psi, None
+
+    psi, _ = jax.lax.scan(jac, psi, None, length=jacobi_iters)
+
+    u = DDY(psi) / h
+    v = -DDX(psi) / h
+
+    # wall vorticity (Thom's formula); lid moves at u_lid along the top row
+    w = w.at[-1, :].set(-2.0 * psi[-2, :] / (h * h) - 2.0 * u_lid / h)
+    w = w.at[0, :].set(-2.0 * psi[1, :] / (h * h))
+    w = w.at[:, 0].set(-2.0 * psi[:, 1] / (h * h))
+    w = w.at[:, -1].set(-2.0 * psi[:, -2] / (h * h))
+
+    adv = u * DDX(w) / h + v * DDY(w) / h
+    diff = LAP(w) / (h * h)
+    w_new = w + dt * (diff / re - adv)
+    # keep walls fixed this step (recomputed next step)
+    w_new = (
+        w_new.at[0, :].set(w[0, :]).at[-1, :].set(w[-1, :])
+        .at[:, 0].set(w[:, 0]).at[:, -1].set(w[:, -1])
+    )
+    return w_new, psi
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--n", type=int, default=128)
+    ap.add_argument("--re", type=float, default=100.0)
+    ap.add_argument("--steps", type=int, default=200)
+    ap.add_argument("--jacobi", type=int, default=30)
+    args = ap.parse_args()
+
+    n = args.n
+    h = 1.0 / (n - 1)
+    dt = 0.2 * h * h * args.re  # stable explicit step
+    w = jnp.zeros((n, n), jnp.float32)
+    psi = jnp.zeros((n, n), jnp.float32)
+
+    stepper = jax.jit(
+        lambda w, psi: step(
+            w, psi, re=args.re, dt=dt, h=h, u_lid=1.0, jacobi_iters=args.jacobi
+        )
+    )
+    w, psi = stepper(w, psi)  # compile
+    t0 = time.time()
+    for _ in range(args.steps):
+        w, psi = stepper(w, psi)
+    jax.block_until_ready(w)
+    dt_wall = time.time() - t0
+
+    # bandwidth accounting: each step moves ~ (jacobi*3 + 8) n^2 arrays
+    arrays_per_step = args.jacobi * 3 + 10
+    gb = args.steps * arrays_per_step * n * n * 4 / 1e9
+    print(f"cavity {n}x{n} Re={args.re}: {args.steps} steps in {dt_wall:.2f}s "
+          f"(~{gb/dt_wall:.2f} GB/s effective)")
+
+    psi_np = np.asarray(psi)
+    ci, cj = np.unravel_index(np.argmin(psi_np), psi_np.shape)
+    print(f"primary vortex: psi_min={psi_np.min():.5f} at "
+          f"(y={ci/(n-1):.2f}, x={cj/(n-1):.2f})  [Ghia Re=100 ref: ~(0.74, 0.62)]")
+    assert psi_np.min() < -1e-3, "no vortex formed — solver broken"
+    assert np.isfinite(psi_np).all()
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,40 @@
+"""Architecture registry: the 10 assigned architectures as selectable
+configs (``--arch <id>``), plus reduced smoke variants."""
+
+from __future__ import annotations
+
+import importlib
+
+from repro.configs.base import SHAPE_CELLS, ModelConfig, ShapeCell, smoke_variant
+
+_MODULES = {
+    "qwen2-7b": "qwen2_7b",
+    "phi3-mini-3.8b": "phi3_mini_3p8b",
+    "codeqwen1.5-7b": "codeqwen1p5_7b",
+    "minitron-8b": "minitron_8b",
+    "seamless-m4t-large-v2": "seamless_m4t_large_v2",
+    "xlstm-125m": "xlstm_125m",
+    "deepseek-moe-16b": "deepseek_moe_16b",
+    "mixtral-8x7b": "mixtral_8x7b",
+    "llama-3.2-vision-90b": "llama3p2_vision_90b",
+    "recurrentgemma-2b": "recurrentgemma_2b",
+}
+
+ARCH_IDS = tuple(_MODULES)
+
+
+def get_config(name: str) -> ModelConfig:
+    if name.endswith("-smoke"):
+        return smoke_variant(get_config(name[: -len("-smoke")]))
+    if name not in _MODULES:
+        raise KeyError(f"unknown arch {name!r}; known: {ARCH_IDS}")
+    mod = importlib.import_module(f"repro.configs.{_MODULES[name]}")
+    return mod.CONFIG
+
+
+def cells_for(cfg: ModelConfig) -> list[ShapeCell]:
+    """The shape cells this arch runs (spec-mandated skips applied)."""
+    cells = [SHAPE_CELLS["train_4k"], SHAPE_CELLS["prefill_32k"], SHAPE_CELLS["decode_32k"]]
+    if cfg.subquadratic:
+        cells.append(SHAPE_CELLS["long_500k"])
+    return cells

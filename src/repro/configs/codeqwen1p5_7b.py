@@ -1,0 +1,23 @@
+"""CodeQwen1.5-7B [hf: Qwen/CodeQwen1.5-7B] — qwen1.5 architecture
+(QKV bias, full MHA-as-GQA kv=32)."""
+
+from repro.configs.base import ModelConfig
+
+CONFIG = ModelConfig(
+    name="codeqwen1.5-7b",
+    family="dense",
+    n_layers=32,
+    d_model=4096,
+    n_heads=32,
+    n_kv_heads=32,
+    d_ff=13440,
+    vocab=92416,
+    head_dim=128,
+    qkv_bias=True,
+    act="swiglu",
+    norm="rmsnorm",
+    rope_theta=1_000_000.0,
+    tie_embeddings=False,
+    unit=("attn",),
+    source="hf:Qwen/CodeQwen1.5-7B",
+)

@@ -1,0 +1,28 @@
+"""Llama-3.2-Vision-90B [hf: meta-llama/Llama-3.2-90B-Vision] — decoder
+backbone with cross-attention image layers every 5th block (20 of 100).
+
+Modality frontend is a STUB per the assignment: ``input_specs()`` provides
+precomputed patch embeddings (B, n_patches, d_model); the backbone's
+cross-attn layers consume them.  FSDP on: 90B params."""
+
+from repro.configs.base import ModelConfig
+
+CONFIG = ModelConfig(
+    name="llama-3.2-vision-90b",
+    family="vlm",
+    n_layers=100,
+    d_model=8192,
+    n_heads=64,
+    n_kv_heads=8,
+    d_ff=28672,
+    vocab=128256,
+    head_dim=128,
+    act="swiglu",
+    norm="rmsnorm",
+    rope_theta=500_000.0,
+    tie_embeddings=False,
+    fsdp=True,
+    unit=("attn", "attn", "attn", "attn", "xattn"),
+    n_frontend_tokens=1600,  # stub: precomputed vision patches
+    source="hf:meta-llama/Llama-3.2-90B-Vision (unverified tier)",
+)

@@ -1,0 +1,23 @@
+"""Minitron-8B [arXiv:2407.14679; hf] — pruned Nemotron-4: GQA kv=8,
+squared-ReLU MLP, LayerNorm, untied embeddings, vocab 256k."""
+
+from repro.configs.base import ModelConfig
+
+CONFIG = ModelConfig(
+    name="minitron-8b",
+    family="dense",
+    n_layers=32,
+    d_model=4096,
+    n_heads=32,
+    n_kv_heads=8,
+    d_ff=16384,
+    vocab=256000,
+    head_dim=128,
+    qkv_bias=False,
+    act="relu2",
+    norm="layernorm",
+    rope_theta=10_000.0,
+    tie_embeddings=False,
+    unit=("attn",),
+    source="arXiv:2407.14679 (hf: nvidia/Minitron-8B-Base)",
+)

@@ -1,0 +1,37 @@
+"""Mixtral-8x7B [arXiv:2401.04088; hf] — 8 experts top-2, sliding-window
+attention (w=4096).  SWA makes it sub-quadratic: long_500k runs with the
+window ring-buffer cache.  8 experts < 16-way model axis, so expert FFNs
+are TP-sharded inside each expert (shard='ffn')."""
+
+from repro.configs.base import ModelConfig, MoEConfig
+
+CONFIG = ModelConfig(
+    name="mixtral-8x7b",
+    family="moe",
+    n_layers=32,
+    d_model=4096,
+    n_heads=32,
+    n_kv_heads=8,
+    d_ff=14336,
+    vocab=32000,
+    head_dim=128,
+    act="swiglu",
+    norm="rmsnorm",
+    rope_theta=1_000_000.0,
+    attn_kind="swa",
+    window=4096,
+    tie_embeddings=False,
+    fsdp=True,  # 46B params
+    moe=MoEConfig(
+        n_experts=8,
+        top_k=2,
+        d_expert=14336,
+        n_shared=0,
+        capacity_factor=1.25,
+        dispatch="dense",
+        shard="ffn",
+    ),
+    unit=("attn_moe",),
+    subquadratic=True,
+    source="arXiv:2401.04088 (hf: mistralai/Mixtral-8x7B-v0.1)",
+)

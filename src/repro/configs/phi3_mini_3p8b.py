@@ -1,0 +1,23 @@
+"""Phi-3-mini 3.8B [arXiv:2404.14219] — dense decoder, RoPE + SwiGLU.
+GQA kv=32 == MHA at this size (per the assigned spec)."""
+
+from repro.configs.base import ModelConfig
+
+CONFIG = ModelConfig(
+    name="phi3-mini-3.8b",
+    family="dense",
+    n_layers=32,
+    d_model=3072,
+    n_heads=32,
+    n_kv_heads=32,
+    d_ff=8192,
+    vocab=32064,
+    head_dim=96,
+    qkv_bias=False,
+    act="swiglu",
+    norm="rmsnorm",
+    rope_theta=10_000.0,
+    tie_embeddings=False,
+    unit=("attn",),
+    source="arXiv:2404.14219 (unverified tier)",
+)

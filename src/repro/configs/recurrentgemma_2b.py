@@ -1,0 +1,26 @@
+"""RecurrentGemma-2B [arXiv:2402.19427; hf] — Griffin hybrid: RG-LRU
+recurrent blocks + local attention, 1 attention per 2 recurrent (unit
+r,r,local; 26 = 8*3 + 2 remainder).  MQA (kv=1), GeGLU, window 2048.
+Sub-quadratic: runs long_500k with constant-size state."""
+
+from repro.configs.base import ModelConfig
+
+CONFIG = ModelConfig(
+    name="recurrentgemma-2b",
+    family="hybrid",
+    n_layers=26,
+    d_model=2560,
+    n_heads=10,
+    n_kv_heads=1,
+    d_ff=7680,
+    vocab=256000,
+    head_dim=256,
+    act="geglu",
+    norm="rmsnorm",
+    rope_theta=10_000.0,
+    window=2048,
+    tie_embeddings=True,
+    unit=("rglru", "rglru", "local"),
+    subquadratic=True,
+    source="arXiv:2402.19427 (hf: google/recurrentgemma-2b)",
+)

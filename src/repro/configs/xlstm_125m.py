@@ -1,0 +1,24 @@
+"""xLSTM-125M [arXiv:2405.04517] — sLSTM + mLSTM blocks (3:1 m:s ratio),
+no positional embedding (recurrence carries position), GPT-NeoX vocab.
+Sub-quadratic: runs the long_500k cell."""
+
+from repro.configs.base import ModelConfig
+
+CONFIG = ModelConfig(
+    name="xlstm-125m",
+    family="ssm",
+    n_layers=12,
+    d_model=768,
+    n_heads=4,
+    n_kv_heads=4,
+    d_ff=0,  # blocks are self-contained (up/down proj inside)
+    vocab=50304,
+    head_dim=192,
+    act="gelu",
+    norm="layernorm",
+    pos_embed="none",
+    tie_embeddings=True,
+    unit=("mlstm", "mlstm", "mlstm", "slstm"),
+    subquadratic=True,
+    source="arXiv:2405.04517 (unverified tier)",
+)

@@ -1,0 +1,12 @@
+"""The paper's primary contribution: a composable data-rearrangement
+library — layout algebra, movement planner, rearrange API, stencil API.
+
+Public surface::
+
+    from repro.core import rearrange, stencil, layout, plan
+    rearrange.permute / permute_order / reorder / interlace / deinterlace
+    rearrange.split_heads / merge_heads / space_to_depth / ...
+    stencil.Stencil / fd_laplacian / apply_functor / conv1d_depthwise
+"""
+
+from repro.core import layout, plan, rearrange, stencil  # noqa: F401

@@ -1,0 +1,130 @@
+"""Layout algebra: the paper's order-vector convention, coalescing, and
+canonicalization of N-D reorders onto the batched-2-D movement plane.
+
+Paper convention ("order" vectors)
+----------------------------------
+The paper describes storage with an ``order`` vector listing dimension ids
+*fastest-changing first*.  numpy/JAX are row-major: the **last** axis is
+fastest.  With paper dim ``k`` <-> numpy axis ``N-1-k``:
+
+    perm[j] = N - 1 - order[N - 1 - j]
+
+maps a paper order vector (for the output, fastest-first, entries naming
+*input* dims) onto a numpy transpose permutation ``out axis j <- in axis
+perm[j]``.  Identity order [0, 1, .., N-1] maps to the identity perm.
+"""
+
+from __future__ import annotations
+
+import math
+from dataclasses import dataclass
+from typing import Sequence
+
+
+def paper_order_to_perm(order: Sequence[int]) -> tuple[int, ...]:
+    """Paper fastest-first order vector -> numpy transpose permutation."""
+    n = len(order)
+    if sorted(order) != list(range(n)):
+        raise ValueError(f"order {order} is not a permutation of 0..{n-1}")
+    return tuple(n - 1 - order[n - 1 - j] for j in range(n))
+
+
+def perm_to_paper_order(perm: Sequence[int]) -> tuple[int, ...]:
+    """Inverse of :func:`paper_order_to_perm` (the mapping is an involution
+    on the index transform, not on the vector itself)."""
+    n = len(perm)
+    return tuple(n - 1 - perm[n - 1 - k] for k in range(n))
+
+
+def invert_perm(perm: Sequence[int]) -> tuple[int, ...]:
+    inv = [0] * len(perm)
+    for j, p in enumerate(perm):
+        inv[p] = j
+    return tuple(inv)
+
+
+def compose_perm(p: Sequence[int], q: Sequence[int]) -> tuple[int, ...]:
+    """Permutation applying q then p: transpose(transpose(x, q), p)."""
+    return tuple(q[pj] for pj in p)
+
+
+def coalesce(
+    shape: Sequence[int], perm: Sequence[int]
+) -> tuple[tuple[int, ...], tuple[int, ...], list[list[int]]]:
+    """Merge input-axis runs that stay adjacent (in order) in the output.
+
+    Returns (new_shape, new_perm, groups) where ``groups[g]`` lists the
+    original input axes folded into merged axis ``g``.  Size-1 axes are
+    absorbed.  This is standard transpose coalescing; the paper gets the
+    same effect implicitly by choosing movement planes.
+    """
+    nd = len(shape)
+    keep = [ax for ax in range(nd) if shape[ax] != 1]
+    if not keep:
+        return (1,) * min(1, nd), (0,) if nd else (), [list(range(nd))]
+    perm_k = [p for p in perm if shape[p] != 1]
+
+    # group consecutive kept input axes that appear consecutively in output
+    groups: list[list[int]] = []
+    pos_in_perm = {ax: i for i, ax in enumerate(perm_k)}
+    for ax in keep:
+        if (
+            groups
+            and groups[-1][-1] == ax - 1
+            and pos_in_perm[ax] == pos_in_perm[groups[-1][-1]] + 1
+        ):
+            groups[-1].append(ax)
+        else:
+            groups.append([ax])
+    group_of = {}
+    for g, axes in enumerate(groups):
+        for ax in axes:
+            group_of[ax] = g
+    new_shape = tuple(math.prod(shape[ax] for ax in axes) for axes in groups)
+    seen: set[int] = set()
+    new_perm = []
+    for ax in perm_k:
+        g = group_of[ax]
+        if g not in seen:
+            seen.add(g)
+            new_perm.append(g)
+    # fold dropped size-1 axes into the nearest group for bookkeeping
+    for ax in range(nd):
+        if shape[ax] == 1:
+            tgt = min(group_of.values(), default=0)
+            groups[tgt].append(ax)
+    return new_shape, tuple(new_perm), groups
+
+
+@dataclass(frozen=True)
+class Canonical:
+    """A reorder reduced to its movement plane (paper §III-B).
+
+    mode:
+      'identity'   no movement beyond a streaming copy
+      'transpose'  fastest axis changes: batched 2-D transpose plane
+      'copy'       fastest axis preserved: blocked row gather
+    rows/cols: the two blocked axes (input indices, post-coalescing)
+    """
+
+    mode: str
+    shape: tuple[int, ...]
+    perm: tuple[int, ...]
+    rows_axis: int | None
+    cols_axis: int | None
+
+    @property
+    def plane_bytes(self) -> int | None:
+        return None
+
+
+def canonicalize(shape: Sequence[int], perm: Sequence[int]) -> Canonical:
+    cshape, cperm, _ = coalesce(shape, perm)
+    n = len(cshape)
+    if n <= 1 or cperm == tuple(range(n)):
+        return Canonical("identity", cshape, cperm, None, None)
+    c_in = n - 1
+    if cperm[-1] == c_in:
+        r_in = cperm[-2] if n >= 2 else None
+        return Canonical("copy", cshape, cperm, r_in, c_in)
+    return Canonical("transpose", cshape, cperm, cperm[-1], c_in)

@@ -1,0 +1,72 @@
+"""Rearrangement planner: canonicalize, cost-model, choose kernel + tiles.
+
+The planner is the library's 'auto gridding' (paper §III-A: "gridding and
+threading configuration is done automatically based on the data size").
+It reports the predicted HBM traffic and roofline time so callers (and the
+benchmarks) can compare achieved vs predicted movement.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Sequence
+
+import jax.numpy as jnp
+
+from repro.core import layout
+from repro.kernels.tiling import plan_copy_tiles, plan_transpose_tiles
+
+# v5e per-chip hardware constants (also used by utils.roofline)
+HBM_GBPS = 819.0
+PEAK_BF16_TFLOPS = 197.0
+ICI_GBPS_PER_LINK = 50.0
+
+
+@dataclass(frozen=True)
+class RearrangePlan:
+    mode: str  # identity | copy | transpose
+    canonical_shape: tuple[int, ...]
+    canonical_perm: tuple[int, ...]
+    block_r: int
+    block_c: int
+    bytes_moved: int  # read + write
+    roofline_s: float  # bytes / HBM bandwidth (one chip)
+
+    def describe(self) -> str:
+        return (
+            f"{self.mode}: shape={self.canonical_shape} perm={self.canonical_perm} "
+            f"tiles=({self.block_r},{self.block_c}) "
+            f"{self.bytes_moved/1e6:.2f} MB moved, "
+            f"roofline {self.roofline_s*1e6:.1f} us @ {HBM_GBPS} GB/s"
+        )
+
+
+def plan_rearrange(shape: Sequence[int], dtype, perm: Sequence[int]) -> RearrangePlan:
+    canon = layout.canonicalize(shape, perm)
+    itemsize = jnp.dtype(dtype).itemsize
+    n_elems = 1
+    for s in shape:
+        n_elems *= int(s)
+    bytes_moved = 2 * n_elems * itemsize  # read once + write once
+
+    if canon.mode == "identity" or canon.rows_axis is None:
+        tp = plan_copy_tiles(
+            max(n_elems // max(shape[-1], 1), 1), shape[-1] if shape else 1, dtype
+        )
+    elif canon.mode == "copy":
+        tp = plan_copy_tiles(
+            canon.shape[canon.rows_axis], canon.shape[canon.cols_axis], dtype
+        )
+    else:
+        tp = plan_transpose_tiles(
+            canon.shape[canon.rows_axis], canon.shape[canon.cols_axis], dtype
+        )
+    return RearrangePlan(
+        mode=canon.mode,
+        canonical_shape=canon.shape,
+        canonical_perm=canon.perm,
+        block_r=tp.block_r,
+        block_c=tp.block_c,
+        bytes_moved=bytes_moved,
+        roofline_s=bytes_moved / (HBM_GBPS * 1e9),
+    )

@@ -1,0 +1,90 @@
+"""Generic stencil API (paper §III-D): stencils as first-class objects.
+
+The paper ships the stencil as a C++ functor compiled into the kernel; we
+ship it as a trace-time Python functor (or an (offsets, weights) table)
+compiled into the Pallas kernel.  ``Stencil`` objects compose: scale, add,
+and the standard finite-difference families are provided.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Callable, Sequence
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import ops, ref
+
+Array = jax.Array
+
+
+@dataclass(frozen=True)
+class Stencil:
+    """A linear stencil: out[p] = sum_k weights[k] * in[p + offsets[k]]."""
+
+    offsets: tuple[tuple[int, int], ...]
+    weights: tuple[float, ...]
+
+    @property
+    def radius(self) -> int:
+        return max(max(abs(dy), abs(dx)) for dy, dx in self.offsets)
+
+    def __call__(self, x: Array, *, boundary: str = "zero") -> Array:
+        return ops.stencil2d(x, self.offsets, self.weights, boundary=boundary)
+
+    def scale(self, a: float) -> "Stencil":
+        return Stencil(self.offsets, tuple(a * w for w in self.weights))
+
+    def __add__(self, other: "Stencil") -> "Stencil":
+        table: dict[tuple[int, int], float] = {}
+        for off, w in zip(self.offsets, self.weights):
+            table[off] = table.get(off, 0.0) + w
+        for off, w in zip(other.offsets, other.weights):
+            table[off] = table.get(off, 0.0) + w
+        offs = tuple(sorted(table))
+        return Stencil(offs, tuple(table[o] for o in offs))
+
+
+def fd_laplacian(order: int) -> Stencil:
+    """2-D Laplacian, central differences of accuracy 2*order (paper Fig. 2
+    orders I..IV)."""
+    offs, wts = ref.fd_stencil_offsets(order)
+    return Stencil(tuple(offs), tuple(wts))
+
+
+def box_blur(radius: int = 1) -> Stencil:
+    """(2r+1)^2 box smoothing filter (the paper's image-filter example)."""
+    offs = tuple(
+        (dy, dx)
+        for dy in range(-radius, radius + 1)
+        for dx in range(-radius, radius + 1)
+    )
+    w = 1.0 / len(offs)
+    return Stencil(offs, (w,) * len(offs))
+
+
+def apply_functor(
+    x: Array, functor: Callable, radius: int, *, boundary: str = "zero"
+) -> Array:
+    """Arbitrary (possibly non-linear) stencil functor — see
+    ``repro.kernels.stencil2d.stencil2d_functor``."""
+    return ops.stencil2d_functor(x, functor, radius, boundary=boundary)
+
+
+def conv1d_depthwise(x: Array, kernel: Array) -> Array:
+    """Causal depthwise temporal conv over (B, S, D) with kernel (K, D) —
+    the RG-LRU / recurrentgemma temporal-conv building block, expressed as
+    a 1-D stencil (a degenerate §III-D stencil: all offsets (dy, 0)).
+
+    out[b, s, d] = sum_k kernel[k, d] * x[b, s - (K-1) + k, d]
+    """
+    k = kernel.shape[0]
+    pads = [(0, 0)] * x.ndim
+    pads[-2] = (k - 1, 0)
+    xp = jnp.pad(x, pads)
+    out = jnp.zeros_like(x)
+    s = x.shape[-2]
+    for i in range(k):
+        out = out + kernel[i] * jax.lax.dynamic_slice_in_dim(xp, i, s, axis=-2)
+    return out

@@ -1,0 +1,106 @@
+"""Data pipeline: deterministic, stateless-resumable token streams.
+
+Fault-tolerance contract: a batch is a pure function of (seed, step,
+host_shard) — restoring from a checkpoint at step N resumes the exact
+stream with NO pipeline state to persist, and elastically rescaled
+runs re-derive their shard from the new topology.
+
+Sources:
+  SyntheticSource  — hash-derived tokens (benchmarks, smoke tests)
+  MemmapSource     — packed uint16/uint32 token file via np.memmap
+Both emit {tokens, labels} of shape (batch, seq) with next-token labels.
+"""
+
+from __future__ import annotations
+
+import threading
+import queue as queue_mod
+from dataclasses import dataclass
+from pathlib import Path
+
+import numpy as np
+
+
+@dataclass(frozen=True)
+class DataConfig:
+    batch: int
+    seq: int
+    vocab: int
+    seed: int = 0
+    path: str | None = None  # memmap file; None -> synthetic
+    n_hosts: int = 1
+    host_id: int = 0
+
+
+class SyntheticSource:
+    """tokens[i] = philox(seed, step, row) % vocab — O(1) random access."""
+
+    def __init__(self, dc: DataConfig):
+        self.dc = dc
+
+    def batch_at(self, step: int) -> dict:
+        dc = self.dc
+        rows = dc.batch // dc.n_hosts
+        rng = np.random.Generator(
+            np.random.Philox(key=dc.seed, counter=[0, 0, dc.host_id, step])
+        )
+        toks = rng.integers(0, dc.vocab, (rows, dc.seq + 1), dtype=np.int32)
+        return {"tokens": toks[:, :-1], "labels": toks[:, 1:]}
+
+
+class MemmapSource:
+    """Fixed-stride window reader over a flat token file; step-addressed."""
+
+    def __init__(self, dc: DataConfig):
+        self.dc = dc
+        path = Path(dc.path)
+        dtype = np.uint32 if path.stat().st_size % 4 == 0 else np.uint16
+        self.data = np.memmap(path, dtype=dtype, mode="r")
+        self.n_tokens = len(self.data)
+
+    def batch_at(self, step: int) -> dict:
+        dc = self.dc
+        rows = dc.batch // dc.n_hosts
+        span = dc.seq + 1
+        n_windows = self.n_tokens // span
+        out = np.empty((rows, span), np.int32)
+        for r in range(rows):
+            w = (step * dc.batch + dc.host_id * rows + r) % n_windows
+            out[r] = self.data[w * span : (w + 1) * span]
+        out %= dc.vocab
+        return {"tokens": out[:, :-1], "labels": out[:, 1:]}
+
+
+def make_source(dc: DataConfig):
+    return MemmapSource(dc) if dc.path else SyntheticSource(dc)
+
+
+class Prefetcher:
+    """Host-side prefetch thread: hides batch construction behind step
+    execution (the CPU-side analogue of the paper's DMA double buffering)."""
+
+    def __init__(self, source, start_step: int = 0, depth: int = 2):
+        self.source = source
+        self.queue: queue_mod.Queue = queue_mod.Queue(maxsize=depth)
+        self.step = start_step
+        self._stop = threading.Event()
+        self.thread = threading.Thread(target=self._run, daemon=True)
+        self.thread.start()
+
+    def _run(self):
+        step = self.step
+        while not self._stop.is_set():
+            batch = self.source.batch_at(step)
+            while not self._stop.is_set():
+                try:
+                    self.queue.put((step, batch), timeout=0.1)
+                    break
+                except queue_mod.Full:
+                    continue
+            step += 1
+
+    def next(self) -> tuple[int, dict]:
+        return self.queue.get()
+
+    def close(self):
+        self._stop.set()

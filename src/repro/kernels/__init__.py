@@ -1,0 +1,7 @@
+"""Pallas TPU kernels for the paper's data rearrangement library.
+
+Layout:
+  <name>.py        pl.pallas_call + BlockSpec VMEM tiling per kernel family
+  ops.py           jit'd dispatch wrappers (Pallas on TPU, oracle elsewhere)
+  ref.py           pure-jnp oracles (ground truth + CPU dispatch target)
+"""

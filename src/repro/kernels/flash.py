@@ -1,0 +1,255 @@
+"""Fused flash attention (Pallas TPU) — hillclimb #1 in EXPERIMENTS §Perf.
+
+Why this kernel exists: the pure-JAX chunked attention in
+``models.attention`` is *algorithmically* flash (online softmax, O(S)
+memory), but XLA materializes each (Sq, chunk) logits tile to HBM between
+the two dots.  At qwen2 train_4k scale that is ~30 GB of HBM traffic per
+layer per device — the memory roofline term is 5x the compute term.  The
+fused kernel keeps the logits tile in VMEM: HBM traffic drops to the
+Q/K/V/O streams, which is what the (8,128)-tiled DMA schedule below moves
+and *nothing else*.
+
+Layout: grid (BH, nQ, nK), K innermost with VMEM scratch (m, l, acc)
+carried across K steps; out written on the last K step.  GQA is handled
+by the q-index -> kv-index map (bh // group).  Causal masking is applied
+per-tile from program ids; fully-masked tiles short-circuit via pl.when.
+
+``dma_bytes()`` reports the kernel's exact HBM traffic from its grid x
+BlockSpec schedule — the roofline accounting used for the §Perf 'after'
+numbers (deterministic, not estimated).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from repro.kernels.tiling import cdiv, force_interpret
+
+NEG_INF = -1e30
+
+
+def _flash_kernel(
+    nk: int, bq: int, bk: int, causal: bool, skv: int,
+    q_ref, k_ref, v_ref, o_ref, m_ref, l_ref, acc_ref,
+):
+    iq = pl.program_id(1)
+    ik = pl.program_id(2)
+
+    @pl.when(ik == 0)
+    def init():
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    q_pos = iq * bq + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 0)
+    k_pos = ik * bk + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 1)
+    needed = (not causal) or (ik * bk <= iq * bq + bq - 1)
+
+    @pl.when(needed)
+    def compute():
+        q = q_ref[0]  # (bq, d)
+        k = k_ref[0]  # (bk, d)
+        s = jax.lax.dot_general(
+            q, k, (((1,), (1,)), ((), ())), preferred_element_type=jnp.float32
+        )  # (bq, bk)
+        valid = k_pos < skv
+        if causal:
+            valid = valid & (q_pos >= k_pos)
+        s = jnp.where(valid, s, NEG_INF)
+        m_prev = m_ref[...]
+        m_new = jnp.maximum(m_prev, s.max(axis=1, keepdims=True))
+        p = jnp.exp(s - m_new)
+        alpha = jnp.exp(m_prev - m_new)
+        l_ref[...] = l_ref[...] * alpha + p.sum(axis=1, keepdims=True)
+        m_ref[...] = m_new
+        # zero OOB value rows: the final partial K tile reads padded HBM
+        # rows whose contents are unspecified (0 * NaN would poison acc)
+        v_rows = ik * bk + jax.lax.broadcasted_iota(jnp.int32, (bk, 1), 0)
+        v_clean = jnp.where(v_rows < skv, v_ref[0], jnp.zeros((), v_ref.dtype))
+        acc_ref[...] = acc_ref[...] * alpha + jax.lax.dot_general(
+            p.astype(v_clean.dtype), v_clean, (((1,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32,
+        )
+
+    @pl.when(ik == nk - 1)
+    def finalize():
+        o_ref[0] = (
+            acc_ref[...] / jnp.maximum(l_ref[...], 1e-30)
+        ).astype(o_ref.dtype)
+
+
+@functools.partial(
+    jax.jit, static_argnames=("causal", "block_q", "block_k", "interpret")
+)
+def flash_attention(
+    q: jax.Array,  # (B, Hq, Sq, D)
+    k: jax.Array,  # (B, Hkv, Skv, D)
+    v: jax.Array,
+    *,
+    causal: bool = True,
+    block_q: int = 512,
+    block_k: int = 512,
+    interpret: bool | None = None,
+) -> jax.Array:
+    b, hq, sq, d = q.shape
+    _, hkv, skv, _ = k.shape
+    g = hq // hkv
+    bq = min(block_q, sq)
+    bk = min(block_k, skv)
+    nq, nk = cdiv(sq, bq), cdiv(skv, bk)
+
+    q3 = q.reshape(b * hq, sq, d)
+    k3 = k.reshape(b * hkv, skv, d)
+    v3 = v.reshape(b * hkv, skv, d)
+
+    def kv_index(bh, iq, ik):
+        return (bh // g, ik, 0)
+
+    interpret = force_interpret() if interpret is None else interpret
+    out = pl.pallas_call(
+        functools.partial(_flash_kernel, nk, bq, bk, causal, skv),
+        grid=(b * hq, nq, nk),
+        in_specs=[
+            pl.BlockSpec((1, bq, d), lambda bh, iq, ik: (bh, iq, 0)),
+            pl.BlockSpec((1, bk, d), kv_index),
+            pl.BlockSpec((1, bk, d), kv_index),
+        ],
+        out_specs=pl.BlockSpec((1, bq, d), lambda bh, iq, ik: (bh, iq, 0)),
+        out_shape=jax.ShapeDtypeStruct((b * hq, sq, d), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((bq, 1), jnp.float32),
+            pltpu.VMEM((bq, 1), jnp.float32),
+            pltpu.VMEM((bq, d), jnp.float32),
+        ],
+        interpret=interpret,
+    )(q3, k3, v3)
+    return out.reshape(b, hq, sq, d)
+
+
+@functools.partial(
+    jax.jit, static_argnames=("block_q", "block_k", "interpret")
+)
+def flash_attention_triangular(
+    q: jax.Array,
+    k: jax.Array,
+    v: jax.Array,
+    *,
+    block_q: int = 512,
+    block_k: int = 512,
+    interpret: bool | None = None,
+) -> jax.Array:
+    """Causal flash with a *triangular* grid: only the nq(nq+1)/2
+    lower-triangle (iq, ik) tiles are visited, so K/V DMA traffic halves
+    vs the rectangular grid.  The (iq, ik) coordinates per grid step come
+    from scalar-prefetched index tables — the same constant-memory
+    analogue the paper uses for reorder strides (§III-B).  Requires
+    Sq == Skv (self-attention)."""
+    b, hq, sq, d = q.shape
+    _, hkv, skv, _ = k.shape
+    if sq != skv:
+        raise ValueError("triangular grid needs Sq == Skv")
+    g = hq // hkv
+    bq = min(block_q, sq)
+    bk = min(block_k, skv)
+    if bq != bk:
+        bq = bk = min(bq, bk)
+    nq = cdiv(sq, bq)
+    ntiles = nq * (nq + 1) // 2
+
+    # lower-triangle walk, row-major: (0,0),(1,0),(1,1),(2,0)...
+    iq_tab, ik_tab = [], []
+    for i in range(nq):
+        for j in range(i + 1):
+            iq_tab.append(i)
+            ik_tab.append(j)
+    tables = jnp.array([iq_tab, ik_tab], jnp.int32)  # (2, ntiles)
+
+    q3 = q.reshape(b * hq, sq, d)
+    k3 = k.reshape(b * hkv, skv, d)
+    v3 = v.reshape(b * hkv, skv, d)
+
+    def kernel(tab_ref, q_ref, k_ref, v_ref, o_ref, m_ref, l_ref, acc_ref):
+        t = pl.program_id(1)
+        iq = tab_ref[0, t]
+        ik = tab_ref[1, t]
+
+        @pl.when(ik == 0)
+        def init():
+            m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+            l_ref[...] = jnp.zeros_like(l_ref)
+            acc_ref[...] = jnp.zeros_like(acc_ref)
+
+        qv = q_ref[0]
+        kv = k_ref[0]
+        s = jax.lax.dot_general(
+            qv, kv, (((1,), (1,)), ((), ())), preferred_element_type=jnp.float32
+        )
+        q_pos = iq * bq + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 0)
+        k_pos = ik * bk + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 1)
+        valid = (q_pos >= k_pos) & (k_pos < skv)
+        s = jnp.where(valid, s, NEG_INF)
+        m_prev = m_ref[...]
+        m_new = jnp.maximum(m_prev, s.max(axis=1, keepdims=True))
+        p = jnp.exp(s - m_new)
+        alpha = jnp.exp(m_prev - m_new)
+        l_ref[...] = l_ref[...] * alpha + p.sum(axis=1, keepdims=True)
+        m_ref[...] = m_new
+        v_rows = ik * bk + jax.lax.broadcasted_iota(jnp.int32, (bk, 1), 0)
+        v_clean = jnp.where(v_rows < skv, v_ref[0], jnp.zeros((), v_ref.dtype))
+        acc_ref[...] = acc_ref[...] * alpha + jax.lax.dot_general(
+            p.astype(v_clean.dtype), v_clean, (((1,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32,
+        )
+
+        @pl.when(ik == iq)  # last tile of this q row
+        def finalize():
+            o_ref[0] = (
+                acc_ref[...] / jnp.maximum(l_ref[...], 1e-30)
+            ).astype(o_ref.dtype)
+
+    interpret = force_interpret() if interpret is None else interpret
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=(b * hq, ntiles),
+        in_specs=[
+            pl.BlockSpec((1, bq, d), lambda bh, t, tab: (bh, tab[0, t], 0)),
+            pl.BlockSpec((1, bk, d), lambda bh, t, tab: (bh // g, tab[1, t], 0)),
+            pl.BlockSpec((1, bk, d), lambda bh, t, tab: (bh // g, tab[1, t], 0)),
+        ],
+        out_specs=pl.BlockSpec((1, bq, d), lambda bh, t, tab: (bh, tab[0, t], 0)),
+        scratch_shapes=[
+            pltpu.VMEM((bq, 1), jnp.float32),
+            pltpu.VMEM((bq, 1), jnp.float32),
+            pltpu.VMEM((bq, d), jnp.float32),
+        ],
+    )
+    out = pl.pallas_call(
+        kernel,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((b * hq, sq, d), q.dtype),
+        interpret=interpret,
+    )(tables, q3, k3, v3)
+    return out.reshape(b, hq, sq, d)
+
+
+def dma_bytes(
+    b: int, hq: int, hkv: int, sq: int, skv: int, d: int, itemsize: int,
+    *, block_q: int = 512, block_k: int = 512, causal: bool = True,
+) -> int:
+    """Exact HBM traffic of the kernel from its grid x BlockSpec schedule:
+    Q loaded once per (iq, ik) visit, K/V once per visit, O once per iq.
+    With causal skipping, ~half the (iq, ik) tiles load K/V only to be
+    skipped — the Pallas pipeline still DMAs mapped blocks, so we count
+    them (upper bound; a triangle-remapped index map would halve this)."""
+    bq = min(block_q, sq)
+    bk = min(block_k, skv)
+    nq, nk = cdiv(sq, bq), cdiv(skv, bk)
+    q_bytes = b * hq * nq * nk * bq * d * itemsize
+    kv_bytes = 2 * b * hq * nq * nk * bk * d * itemsize  # via the bh//g map
+    o_bytes = b * hq * nq * bq * d * itemsize
+    return q_bytes + kv_bytes + o_bytes

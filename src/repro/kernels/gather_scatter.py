@@ -1,0 +1,91 @@
+"""Index-set read/write kernels (paper §III-A "specified set of indices").
+
+The paper's basic access kernels support gathering/scattering rows by an
+index table; in CUDA the table lives in constant memory.  On TPU the table
+is **scalar-prefetched** (`pltpu.PrefetchScalarGridSpec`): it lands in SMEM
+before the grid runs, and the BlockSpec index_map reads it to choose which
+row block each grid step DMAs.  This is the exact functional analogue of
+constant memory: small, uniformly read metadata off the datapath.
+
+This kernel is the framework's MoE dispatch/combine primitive: token
+permutation by expert id is precisely an index-set gather (DESIGN.md §4).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from repro.kernels.tiling import cdiv, force_interpret, plan_copy_tiles
+
+
+def _copy_row_kernel(idx_ref, x_ref, o_ref):
+    del idx_ref  # consumed by the index maps
+    o_ref[...] = x_ref[...]
+
+
+@functools.partial(jax.jit, static_argnames=("block_c", "interpret"))
+def gather_rows(
+    x: jax.Array,
+    idx: jax.Array,
+    *,
+    block_c: int | None = None,
+    interpret: bool | None = None,
+) -> jax.Array:
+    """out[i, :] = x[idx[i], :].  idx: int32 (num_out,)."""
+    if x.ndim != 2 or idx.ndim != 1:
+        raise ValueError(f"gather_rows wants 2-D x and 1-D idx, got {x.shape}, {idx.shape}")
+    n_out = idx.shape[0]
+    C = x.shape[1]
+    bc = min(block_c or plan_copy_tiles(1, C, x.dtype).block_c, C)
+    nC = cdiv(C, bc)
+
+    interpret = force_interpret() if interpret is None else interpret
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=(n_out, nC),
+        in_specs=[pl.BlockSpec((1, bc), lambda i, j, idx_ref: (idx_ref[i], j))],
+        out_specs=pl.BlockSpec((1, bc), lambda i, j, idx_ref: (i, j)),
+    )
+    return pl.pallas_call(
+        _copy_row_kernel,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((n_out, C), x.dtype),
+        interpret=interpret,
+    )(idx.astype(jnp.int32), x)
+
+
+@functools.partial(jax.jit, static_argnames=("block_c", "interpret"))
+def scatter_rows(
+    x: jax.Array,
+    idx: jax.Array,
+    *,
+    block_c: int | None = None,
+    interpret: bool | None = None,
+) -> jax.Array:
+    """out[idx[i], :] = x[i, :].  ``idx`` must be a permutation of
+    range(x.shape[0]) — every output row is written exactly once."""
+    if x.ndim != 2 or idx.ndim != 1 or idx.shape[0] != x.shape[0]:
+        raise ValueError(f"scatter_rows wants idx over rows, got {x.shape}, {idx.shape}")
+    n = x.shape[0]
+    C = x.shape[1]
+    bc = min(block_c or plan_copy_tiles(1, C, x.dtype).block_c, C)
+    nC = cdiv(C, bc)
+
+    interpret = force_interpret() if interpret is None else interpret
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=(n, nC),
+        in_specs=[pl.BlockSpec((1, bc), lambda i, j, idx_ref: (i, j))],
+        out_specs=pl.BlockSpec((1, bc), lambda i, j, idx_ref: (idx_ref[i], j)),
+    )
+    return pl.pallas_call(
+        _copy_row_kernel,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((n, C), x.dtype),
+        interpret=interpret,
+    )(idx.astype(jnp.int32), x)

@@ -1,0 +1,112 @@
+"""Interlace / de-interlace kernels (paper §III-C), TPU-native.
+
+AoS <-> SoA conversion: n arrays of length L interleaved element-wise into
+one array of length n*L (and back).  The CUDA version stages 8x8 blocks in
+shared memory with n*64 threads so that both the global load and the global
+store stay coalesced; the interleaving shuffle happens in shared memory.
+
+TPU version: the key observation is that for a column block of width
+``bc``, the interleaved output of that block is a *contiguous* run of
+``n*bc`` elements.  So:
+
+  load   n lane-aligned tiles (1, bc)    — one per source array (coalesced),
+  shuffle in VMEM:  rows.T.reshape(n,bc) — the VREG transpose,
+  store  one lane-aligned tile (n, bc)   — contiguous in the output (coalesced).
+
+Shared memory -> VMEM, warp shuffle -> VPU transpose, and the 8x8 block
+becomes an (n, bc) tile sized for (8,128) registers.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from repro.kernels.tiling import LANES, VMEM_BUDGET, force_interpret
+
+
+def _pick_bc(L: int, n: int, itemsize: int) -> int:
+    """Largest lane-multiple column block dividing L within VMEM budget."""
+    budget_elems = VMEM_BUDGET // (2 * itemsize * max(n, 1))
+    bc = LANES
+    while bc * 2 <= budget_elems and L % (bc * 2) == 0 and bc * 2 <= 16384:
+        bc *= 2
+    return bc
+
+
+def _interlace_kernel(n, bc, *refs):
+    o_ref = refs[-1]
+    rows = jnp.concatenate([r[...] for r in refs[:-1]], axis=0)  # (n, bc)
+    # out[j*n + k] = rows[k, j]  ==  row-major flat of rows.T
+    o_ref[...] = rows.T.reshape(n, bc)
+
+
+def _deinterlace_kernel(n, bc, x_ref, *o_refs):
+    run = x_ref[...].reshape(bc, n)  # run[j, k] = flat[j*n + k]
+    for k, o_ref in enumerate(o_refs):
+        o_ref[...] = run[:, k].reshape(1, bc)
+
+
+@functools.partial(jax.jit, static_argnames=("block_c", "interpret"))
+def interlace(
+    arrays: tuple[jax.Array, ...],
+    *,
+    block_c: int | None = None,
+    interpret: bool | None = None,
+) -> jax.Array:
+    """n 1-D arrays (L,) -> (n*L,) with out[j*n + k] = arrays[k][j]."""
+    n = len(arrays)
+    L = arrays[0].shape[0]
+    for a in arrays:
+        if a.shape != (L,) or a.dtype != arrays[0].dtype:
+            raise ValueError("interlace requires same-shape/dtype 1-D arrays")
+    dtype = arrays[0].dtype
+    bc = block_c or _pick_bc(L, n, jnp.dtype(dtype).itemsize)
+    if L % bc:
+        raise ValueError(f"L={L} not divisible by block_c={bc}")
+    g = L // bc
+    views = [a.reshape(g, bc) for a in arrays]
+
+    interpret = force_interpret() if interpret is None else interpret
+    out2d = pl.pallas_call(
+        functools.partial(_interlace_kernel, n, bc),
+        grid=(g,),
+        in_specs=[pl.BlockSpec((1, bc), lambda i: (i, 0)) for _ in range(n)],
+        out_specs=pl.BlockSpec((n, bc), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((g * n, bc), dtype),
+        interpret=interpret,
+    )(*views)
+    return out2d.reshape(n * L)
+
+
+@functools.partial(jax.jit, static_argnames=("n", "block_c", "interpret"))
+def deinterlace(
+    x: jax.Array,
+    n: int,
+    *,
+    block_c: int | None = None,
+    interpret: bool | None = None,
+) -> tuple[jax.Array, ...]:
+    """(n*L,) -> n arrays (L,): inverse of :func:`interlace`."""
+    if x.ndim != 1 or x.shape[0] % n:
+        raise ValueError(f"bad shape {x.shape} for n={n}")
+    L = x.shape[0] // n
+    bc = block_c or _pick_bc(L, n, jnp.dtype(x.dtype).itemsize)
+    if L % bc:
+        raise ValueError(f"L={L} not divisible by block_c={bc}")
+    g = L // bc
+    xview = x.reshape(g * n, bc)
+
+    interpret = force_interpret() if interpret is None else interpret
+    outs = pl.pallas_call(
+        functools.partial(_deinterlace_kernel, n, bc),
+        grid=(g,),
+        in_specs=[pl.BlockSpec((n, bc), lambda i: (i, 0))],
+        out_specs=[pl.BlockSpec((1, bc), lambda i: (i, 0)) for _ in range(n)],
+        out_shape=[jax.ShapeDtypeStruct((g, bc), x.dtype) for _ in range(n)],
+        interpret=interpret,
+    )(xview)
+    return tuple(o.reshape(L) for o in outs)

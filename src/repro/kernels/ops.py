@@ -1,0 +1,165 @@
+"""Dispatch layer: one public op per kernel, Pallas on TPU / oracle elsewhere.
+
+Dispatch rules
+--------------
+* On TPU the Pallas kernels own the fast path.
+* On CPU/GPU the jnp oracles (``ref.py``) are the dispatch target — XLA
+  fuses them competitively, and (critically for this container) the
+  multi-pod **dry-run compiles the XLA path**, keeping HLO clean for the
+  roofline analysis.
+* ``REPRO_PALLAS_INTERPRET=1`` forces every op through the Pallas kernel in
+  interpret mode — this is how the test suite validates kernel semantics
+  on CPU.
+* Kernels have alignment preconditions (lane divisibility etc.).  When an
+  input violates them, the op silently falls back to the oracle — the
+  library never fails on an odd shape, it just loses the fast path (same
+  contract as the paper's library).
+"""
+
+from __future__ import annotations
+
+import os
+from typing import Callable, Sequence
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import (
+    copy as copy_k,
+    gather_scatter as gs_k,
+    interlace as il_k,
+    permute3d as p3_k,
+    ref,
+    reorder_nd as rnd_k,
+    stencil2d as st_k,
+)
+
+Array = jax.Array
+
+
+def _platform() -> str:
+    return jax.devices()[0].platform
+
+
+def use_pallas() -> bool:
+    if os.environ.get("REPRO_PALLAS_INTERPRET", "0") == "1":
+        return True
+    if os.environ.get("REPRO_DISABLE_PALLAS", "0") == "1":
+        return False
+    return _platform() == "tpu"
+
+
+def _interpret() -> bool:
+    return _platform() != "tpu"
+
+
+# ---------------------------------------------------------------------------
+# public ops
+# ---------------------------------------------------------------------------
+
+
+def copy(x: Array) -> Array:
+    if use_pallas():
+        try:
+            return copy_k.copy(x, interpret=_interpret())
+        except ValueError:
+            pass
+    return ref.copy(x)
+
+
+def copy_range(x: Array, start, size: int) -> Array:
+    if use_pallas() and x.ndim == 2:
+        return copy_k.copy_range(x, start, size, interpret=_interpret())
+    return ref.copy_range(x, start, size)
+
+
+def gather_rows(x: Array, idx: Array) -> Array:
+    if use_pallas() and x.ndim == 2:
+        return gs_k.gather_rows(x, idx, interpret=_interpret())
+    return ref.gather_rows(x, idx)
+
+
+def scatter_rows(x: Array, idx: Array, num_out: int | None = None) -> Array:
+    if (
+        use_pallas()
+        and x.ndim == 2
+        and (num_out is None or num_out == x.shape[0])
+    ):
+        return gs_k.scatter_rows(x, idx, interpret=_interpret())
+    return ref.scatter_rows(x, idx, num_out)
+
+
+def transpose2d_batched(x: Array, *, diagonal: bool = False) -> Array:
+    if use_pallas():
+        return p3_k.transpose2d_batched(x, diagonal=diagonal, interpret=_interpret())
+    return ref.transpose2d_batched(x)
+
+
+def permute(x: Array, perm: Sequence[int], *, grid_order: str = "out") -> Array:
+    perm = tuple(int(p) for p in perm)
+    if use_pallas():
+        return rnd_k.permute_nd(x, perm, grid_order=grid_order, interpret=_interpret())
+    return ref.permute(x, perm)
+
+
+def reorder_nm(
+    x: Array,
+    perm: Sequence[int],
+    base: Sequence[int] | None = None,
+    sizes: Sequence[int] | None = None,
+) -> Array:
+    """N->M reorder: window select + permute + squeeze (paper §III-B)."""
+    if base is None and sizes is None and len(perm) == x.ndim:
+        return permute(x, perm)
+    # windowed form: slice via oracle (cheap, contiguousable), permute via kernel
+    nd = x.ndim
+    base_l = [0] * nd if base is None else list(base)
+    sizes_l = list(x.shape) if sizes is None else list(sizes)
+    window = jax.lax.dynamic_slice(x, base_l, sizes_l)
+    kept = [int(p) for p in perm]
+    full_perm = kept + [ax for ax in range(nd) if ax not in set(kept)]
+    moved = permute(window, full_perm) if use_pallas() else ref.permute(window, full_perm)
+    return moved.reshape(tuple(sizes_l[ax] for ax in kept))
+
+
+def interlace(arrays: Sequence[Array]) -> Array:
+    arrays = list(arrays)
+    if use_pallas() and all(a.ndim == 1 for a in arrays):
+        try:
+            return il_k.interlace(tuple(arrays), interpret=_interpret())
+        except ValueError:
+            pass
+    return ref.interlace(arrays)
+
+
+def deinterlace(x: Array, n: int) -> list[Array]:
+    if use_pallas() and x.ndim == 1:
+        try:
+            return list(il_k.deinterlace(x, n, interpret=_interpret()))
+        except ValueError:
+            pass
+    return ref.deinterlace(x, n)
+
+
+def stencil2d(
+    x: Array,
+    offsets,
+    weights,
+    *,
+    boundary: str = "zero",
+) -> Array:
+    if use_pallas() and boundary == "zero" and x.ndim == 2:
+        return st_k.stencil2d(x, offsets, weights, interpret=_interpret())
+    return ref.stencil2d(x, offsets, weights, boundary=boundary)
+
+
+def stencil2d_functor(
+    x: Array,
+    functor: Callable,
+    radius: int,
+    *,
+    boundary: str = "zero",
+) -> Array:
+    if use_pallas() and boundary == "zero" and x.ndim == 2:
+        return st_k.stencil2d_functor(x, functor, radius, interpret=_interpret())
+    return ref.stencil2d_functor(x, functor, radius, boundary=boundary)

@@ -1,0 +1,197 @@
+"""Pure-jnp oracles for every kernel in ``repro.kernels``.
+
+These are the ground-truth semantics the Pallas kernels are validated
+against (interpret mode on CPU, real lowering on TPU).  They are also the
+*dispatch target* on non-TPU platforms: XLA fuses these into respectable
+code on CPU/GPU, while the Pallas implementations own the TPU fast path.
+
+Conventions
+-----------
+* numpy axis order: axis 0 slowest, axis -1 fastest (row-major), matching
+  the paper's "row major linearized storage".
+* The paper's ``order`` vectors (fastest-dim-first) are converted to numpy
+  transpose permutations by :func:`repro.core.layout.paper_order_to_perm`.
+"""
+
+from __future__ import annotations
+
+from typing import Callable, Sequence
+
+import jax
+import jax.numpy as jnp
+
+Array = jax.Array
+
+# ---------------------------------------------------------------------------
+# §III-A  basic read/write
+# ---------------------------------------------------------------------------
+
+
+def copy(x: Array) -> Array:
+    """Contiguous device-to-device copy (the paper's read/write kernel)."""
+    return x + jnp.zeros((), x.dtype)  # force a materialized copy under jit
+
+
+def copy_range(x: Array, start: int, size: int) -> Array:
+    """Ranged access: copy ``x[start:start+size]`` along axis 0."""
+    return jax.lax.dynamic_slice_in_dim(x, start, size, axis=0)
+
+
+def gather_rows(x: Array, idx: Array) -> Array:
+    """Index-set access: rows of ``x`` (axis 0) selected by ``idx``."""
+    return jnp.take(x, idx, axis=0)
+
+
+def scatter_rows(x: Array, idx: Array, num_out: int | None = None) -> Array:
+    """Permutation scatter: ``out[idx[i]] = x[i]``.  ``idx`` must be a
+    permutation (or injective into ``num_out`` rows)."""
+    n = x.shape[0] if num_out is None else num_out
+    out = jnp.zeros((n,) + x.shape[1:], x.dtype)
+    return out.at[idx].set(x)
+
+
+# ---------------------------------------------------------------------------
+# §III-B  permute / reorder
+# ---------------------------------------------------------------------------
+
+
+def transpose2d(x: Array) -> Array:
+    """2-D transpose — the building block of every reorder."""
+    return x.T
+
+
+def transpose2d_batched(x: Array) -> Array:
+    """(B, R, C) -> (B, C, R): batched 2-D transpose."""
+    return jnp.swapaxes(x, -1, -2)
+
+
+def permute(x: Array, perm: Sequence[int]) -> Array:
+    """N-D permute with a numpy-convention permutation."""
+    return jnp.transpose(x, tuple(perm))
+
+
+def reorder_nm(
+    x: Array,
+    perm: Sequence[int],
+    base: Sequence[int] | None = None,
+    sizes: Sequence[int] | None = None,
+) -> Array:
+    """The paper's generic N->M reorder: slice a window ``[base, base+sizes)``
+    out of ``x``, transpose the kept axes into ``perm`` order, and squeeze
+    axes not present in ``perm`` (their window size must be 1).
+
+    ``perm`` lists the *input* axes (numpy convention) that appear in the
+    output, slowest-first.  Axes of ``x`` not in ``perm`` are reduced to a
+    single element selected by ``base``.
+    """
+    nd = x.ndim
+    base = [0] * nd if base is None else list(base)
+    sizes = list(x.shape) if sizes is None else list(sizes)
+    kept = set(int(p) for p in perm)
+    for ax in range(nd):
+        if ax not in kept and sizes[ax] != 1:
+            raise ValueError(
+                f"axis {ax} dropped by perm {perm} must have window size 1, "
+                f"got {sizes[ax]}"
+            )
+    window = jax.lax.dynamic_slice(x, base, sizes)
+    full_perm = list(perm) + [ax for ax in range(nd) if ax not in kept]
+    moved = jnp.transpose(window, full_perm)
+    return moved.reshape(tuple(sizes[ax] for ax in perm))
+
+
+# ---------------------------------------------------------------------------
+# §III-C  interlace / de-interlace
+# ---------------------------------------------------------------------------
+
+
+def interlace(arrays: Sequence[Array]) -> Array:
+    """n arrays of shape (..., L) -> one array (..., L*n) with
+    ``out[..., j*n + k] = arrays[k][..., j]`` (AoS from SoA)."""
+    stacked = jnp.stack(arrays, axis=-1)  # (..., L, n)
+    return stacked.reshape(*stacked.shape[:-2], -1)
+
+
+def deinterlace(x: Array, n: int) -> list[Array]:
+    """Inverse of :func:`interlace`: (..., L*n) -> n arrays (..., L)."""
+    if x.shape[-1] % n:
+        raise ValueError(f"last dim {x.shape[-1]} not divisible by n={n}")
+    split = x.reshape(*x.shape[:-1], x.shape[-1] // n, n)
+    return [split[..., k] for k in range(n)]
+
+
+# ---------------------------------------------------------------------------
+# §III-D  generic 2-D stencil
+# ---------------------------------------------------------------------------
+
+
+def stencil2d(
+    x: Array,
+    offsets: Sequence[tuple[int, int]],
+    weights: Array,
+    *,
+    boundary: str = "zero",
+) -> Array:
+    """Weighted-sum stencil: ``out[y,x] = sum_k w[k] * in[y+dy_k, x+dx_k]``.
+
+    boundary: 'zero' pads with zeros, 'clamp' replicates the edge.
+    """
+    r = max(max(abs(dy), abs(dx)) for dy, dx in offsets)
+    mode = "constant" if boundary == "zero" else "edge"
+    xp = jnp.pad(x, r, mode=mode)
+    h, w = x.shape
+    out = jnp.zeros_like(x)
+    for (dy, dx), wk in zip(offsets, weights):
+        out = out + wk * jax.lax.dynamic_slice(xp, (r + dy, r + dx), (h, w))
+    return out
+
+
+def stencil2d_functor(
+    x: Array,
+    functor: Callable[..., Array],
+    radius: int,
+    *,
+    boundary: str = "zero",
+) -> Array:
+    """Generic functor stencil (the paper's template/functor mechanism).
+
+    ``functor(shift)`` receives a function ``shift(dy, dx) -> Array`` that
+    returns the input shifted by (dy, dx) (same shape as ``x``), and returns
+    the output grid.  Arbitrary point-wise combinations are allowed, e.g.::
+
+        def laplace(shift):
+            return shift(-1, 0) + shift(1, 0) + shift(0, -1) + shift(0, 1) \
+                   - 4.0 * shift(0, 0)
+    """
+    mode = "constant" if boundary == "zero" else "edge"
+    xp = jnp.pad(x, radius, mode=mode)
+    h, w = x.shape
+
+    def shift(dy: int, dx: int) -> Array:
+        if max(abs(dy), abs(dx)) > radius:
+            raise ValueError(f"shift ({dy},{dx}) exceeds radius {radius}")
+        return jax.lax.dynamic_slice(xp, (radius + dy, radius + dx), (h, w))
+
+    return functor(shift)
+
+
+def fd_stencil_offsets(order: int) -> tuple[list[tuple[int, int]], list[float]]:
+    """Central finite-difference Laplacian stencil of a given order
+    (paper Fig. 2 runs orders I..IV — half-widths 1..4 along each axis).
+
+    Returns cross-shaped (offsets, weights) for the 2-D Laplacian using
+    standard central-difference coefficients of accuracy 2*order.
+    """
+    coeffs = {
+        1: [-2.0, 1.0],
+        2: [-5.0 / 2.0, 4.0 / 3.0, -1.0 / 12.0],
+        3: [-49.0 / 18.0, 3.0 / 2.0, -3.0 / 20.0, 1.0 / 90.0],
+        4: [-205.0 / 72.0, 8.0 / 5.0, -1.0 / 5.0, 8.0 / 315.0, -1.0 / 560.0],
+    }[order]
+    offsets: list[tuple[int, int]] = [(0, 0)]
+    weights: list[float] = [2.0 * coeffs[0]]  # d2/dy2 + d2/dx2 share center
+    for k in range(1, order + 1):
+        for off in ((k, 0), (-k, 0), (0, k), (0, -k)):
+            offsets.append(off)
+            weights.append(coeffs[k])
+    return offsets, weights

@@ -1,0 +1,155 @@
+"""Generic N-D reorder kernel (paper §III-B "Reorder Kernel"), TPU-native.
+
+The paper's canonicalization — *every valid reorder reduces to batched 2-D
+data movement in the plane of the fastest-changing input dim and the
+fastest-changing output dim* — is kept intact.  What changes on TPU:
+
+* CUDA stores the stride tables in **constant memory**; every thread reads
+  them to compute its source address.  On TPU we go one better: block
+  indices are computed *arithmetically in the scalar core* inside the
+  BlockSpec ``index_map`` (mixed-radix decomposition of the linearized
+  batch grid index, with radices baked in as compile-time constants).
+  Zero memory traffic for metadata, and no 5-dim performance cliff — the
+  paper's Table 2 shows 43 GB/s at 5-D because of metadata-lookup overhead;
+  our index arithmetic is free relative to the DMAs it schedules.
+* Exactly **two axes are blocked**: the input-fastest axis (lane dim of the
+  load tile) and the axis that becomes output-fastest (lane dim of the
+  store tile).  All other axes are batch.  Both DMAs therefore move full
+  lane-aligned tiles — coalesced-on-both-sides, per the paper.
+* If the permutation *preserves* the fastest axis ("copy mode"), the kernel
+  degenerates to a blocked gather of contiguous rows — the paper's N-to-M
+  case with preserved dim-0.
+
+``perm`` uses numpy convention: ``out axis j  <-  in axis perm[j]``.
+"""
+
+from __future__ import annotations
+
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from repro.kernels.tiling import (
+    cdiv,
+    force_interpret,
+    plan_copy_tiles,
+    plan_transpose_tiles,
+)
+
+
+def _permute_kernel(perm, x_ref, o_ref):
+    o_ref[...] = jnp.transpose(x_ref[...], perm)
+
+
+def _dim_semantics(n: int):
+    try:
+        return pltpu.CompilerParams(dimension_semantics=(pltpu.ARBITRARY,) * n)
+    except Exception:  # pragma: no cover
+        return None
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("perm", "block_r", "block_c", "grid_order", "interpret"),
+)
+def permute_nd(
+    x: jax.Array,
+    perm: tuple[int, ...],
+    *,
+    block_r: int | None = None,
+    block_c: int | None = None,
+    grid_order: str = "out",
+    interpret: bool | None = None,
+) -> jax.Array:
+    """General N-D permute: ``out = jnp.transpose(x, perm)`` as a tiled
+    Pallas data-movement kernel.
+
+    grid_order: 'out' walks batch blocks in output-linear order (stores are
+    sequential in HBM), 'in' walks in input-linear order (loads sequential).
+    This is the TPU analogue of the paper's block-scheduling policies.
+    """
+    N = x.ndim
+    perm = tuple(int(p) for p in perm)
+    if sorted(perm) != list(range(N)):
+        raise ValueError(f"bad perm {perm} for rank {N}")
+    out_shape = tuple(x.shape[p] for p in perm)
+    if N == 0 or perm == tuple(range(N)):
+        # identity: fall through to a plain copy (still a kernel-shaped op)
+        return x + jnp.zeros((), x.dtype)
+
+    c_in = N - 1  # input-fastest axis
+    transpose_mode = perm[-1] != c_in
+    if transpose_mode:
+        r_in = perm[-1]  # axis that becomes output-fastest
+    else:
+        # fastest axis preserved: block the axis that becomes 2nd-fastest out
+        r_in = perm[-2] if N >= 2 else c_in
+
+    R, C = x.shape[r_in], x.shape[c_in]
+    if transpose_mode:
+        plan = plan_transpose_tiles(R, C, x.dtype)
+    else:
+        plan = plan_copy_tiles(R, C, x.dtype)
+    br = min(block_r or plan.block_r, R)
+    bc = min(block_c or plan.block_c, C)
+
+    # per-axis block size and block count
+    blocks = [1] * N
+    blocks[r_in], blocks[c_in] = br, bc
+    nblocks = [cdiv(x.shape[k], blocks[k]) for k in range(N)]
+
+    # batch axes (all but r_in/c_in), walked in in- or out-linear order
+    if grid_order == "out":
+        batch_in_axes = [p for p in perm if p not in (r_in, c_in)]
+    elif grid_order == "in":
+        batch_in_axes = [k for k in range(N) if k not in (r_in, c_in)]
+    else:
+        raise ValueError(f"grid_order must be 'in' or 'out', got {grid_order!r}")
+    batch_radix = [nblocks[a] for a in batch_in_axes]
+    G = math.prod(batch_radix) if batch_radix else 1
+
+    # mixed-radix weights: coordinate of batch axis a = (g // w[a]) % radix[a]
+    weights: dict[int, int] = {}
+    w = 1
+    for a, r in zip(reversed(batch_in_axes), reversed(batch_radix)):
+        weights[a] = w
+        w *= r
+
+    def in_coords(g, i, j):
+        coords = []
+        for k in range(N):
+            if k == r_in:
+                coords.append(i)
+            elif k == c_in:
+                coords.append(j)
+            else:
+                coords.append(lax.rem(g // weights[k], nblocks[k]))
+        return coords
+
+    def in_map(g, i, j):
+        return tuple(in_coords(g, i, j))
+
+    def out_map(g, i, j):
+        c = in_coords(g, i, j)
+        return tuple(c[p] for p in perm)
+
+    in_block = tuple(blocks)
+    out_block = tuple(blocks[p] for p in perm)
+
+    interpret = force_interpret() if interpret is None else interpret
+    params = _dim_semantics(3)
+    kwargs = {"compiler_params": params} if params is not None else {}
+    return pl.pallas_call(
+        functools.partial(_permute_kernel, perm),
+        grid=(G, nblocks[r_in], nblocks[c_in]),
+        in_specs=[pl.BlockSpec(in_block, in_map)],
+        out_specs=pl.BlockSpec(out_block, out_map),
+        out_shape=jax.ShapeDtypeStruct(out_shape, x.dtype),
+        interpret=interpret,
+        **kwargs,
+    )(x)

@@ -1,0 +1,106 @@
+"""Shared tiling helpers for the Pallas rearrangement kernels.
+
+TPU facts encoded here (v5e target):
+* native vector register tile is (8, 128) for fp32 — (sublanes, lanes);
+  bf16 packs (16, 128), int8 (32, 128).
+* VMEM is ~16 MiB/core; the Pallas pipeline double-buffers every operand,
+  so the *planner budget* is VMEM_BUDGET/2 per direction.
+* DMA efficiency wants >= ~64 KiB per transfer; larger blocks amortize
+  better until they crowd out double buffering.
+
+The CUDA paper's 32x32 tile / 32x8 threads / 4-elements-per-thread choices
+are the C1060 equivalents of exactly these constraints — see DESIGN.md §2.
+"""
+
+from __future__ import annotations
+
+import os
+from dataclasses import dataclass
+
+import jax.numpy as jnp
+
+# ---------------------------------------------------------------------------
+
+VMEM_BYTES = 16 * 1024 * 1024
+# pipeline double-buffers in + out; keep a conservative working budget
+VMEM_BUDGET = VMEM_BYTES // 4
+
+LANES = 128
+
+
+def sublanes(dtype) -> int:
+    """Minimum second-minor tile dim for a dtype (packing)."""
+    itemsize = jnp.dtype(dtype).itemsize
+    return {4: 8, 2: 16, 1: 32}.get(itemsize, 8)
+
+
+def round_up(x: int, m: int) -> int:
+    return -(-x // m) * m
+
+
+def cdiv(a: int, b: int) -> int:
+    return -(-a // b)
+
+
+def pick_block(dim: int, target: int, mult: int) -> int:
+    """Block size for one axis: ``target`` rounded to ``mult``, clamped to
+    cover ``dim`` with no more padding waste than one partial block."""
+    if dim <= mult:
+        return dim  # tiny axis: single (possibly sub-tile) block
+    b = min(round_up(target, mult), round_up(dim, mult))
+    return b
+
+
+@dataclass(frozen=True)
+class TilePlan:
+    """Chosen 2-D tile for the (rows, cols) movement plane."""
+
+    block_r: int
+    block_c: int
+    grid_r: int
+    grid_c: int
+
+    @property
+    def vmem_bytes_per_buf(self) -> int:
+        return self.block_r * self.block_c
+
+
+def plan_transpose_tiles(
+    rows: int, cols: int, dtype, *, target: int | None = None
+) -> TilePlan:
+    """Tile the (rows, cols) transpose plane.
+
+    Both the load block (br, bc) and the store block (bc, br) must be
+    lane/sublane aligned, so *both* dims are rounded to LANES when large
+    (a square 256x256 default keeps both sides full-width DMAs — the TPU
+    version of "coalesced on read AND write", paper §III-B).
+    """
+    itemsize = jnp.dtype(dtype).itemsize
+    if target is None:
+        # in+out double-buffered: 4 buffers of br*bc*itemsize
+        target = 256 if itemsize >= 2 else 512
+        while 4 * target * target * itemsize > VMEM_BUDGET * 2:
+            target //= 2
+    br = pick_block(rows, target, LANES if rows >= LANES else sublanes(dtype))
+    bc = pick_block(cols, target, LANES if cols >= LANES else sublanes(dtype))
+    return TilePlan(br, bc, cdiv(rows, br), cdiv(cols, bc))
+
+
+def plan_copy_tiles(rows: int, cols: int, dtype, *, target_rows: int = 512) -> TilePlan:
+    """Tile a streaming (rows, cols) copy: cols stay full-width when they
+    fit the budget (long contiguous DMAs), rows are blocked."""
+    itemsize = jnp.dtype(dtype).itemsize
+    sl = sublanes(dtype)
+    bc = cols
+    max_elems = VMEM_BUDGET // (2 * itemsize)
+    br = max(sl, min(round_up(target_rows, sl), max_elems // max(bc, 1)))
+    if br > rows:
+        br = rows
+    while br * bc > max_elems and br > sl:
+        br //= 2
+    return TilePlan(br, bc, cdiv(rows, br), cdiv(cols, bc))
+
+
+def force_interpret() -> bool:
+    """Tests set REPRO_PALLAS_INTERPRET=1 to run kernels on CPU."""
+    return os.environ.get("REPRO_PALLAS_INTERPRET", "0") == "1"

@@ -1,0 +1,42 @@
+"""Production mesh construction (16x16 single pod / 2x16x16 multi-pod).
+
+A FUNCTION, not a module-level constant — importing this module never
+touches jax device state (required for the dry-run's forced 512-device
+initialization to happen first).
+"""
+
+from __future__ import annotations
+
+import jax
+
+
+def _auto(n: int):
+    return (jax.sharding.AxisType.Auto,) * n
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes, axis_types=_auto(len(axes)))
+
+
+def make_host_mesh():
+    """Degenerate mesh over whatever devices exist (smoke/e2e runs)."""
+    n = len(jax.devices())
+    return jax.make_mesh((n, 1), ("data", "model"), axis_types=_auto(2))
+
+
+def mesh_axes_info(mesh) -> dict:
+    names = mesh.axis_names
+    return {
+        "model": "model",
+        "data": "data",
+        "model_size": mesh.shape["model"] if "model" in names else 1,
+        "data_size": mesh.shape["data"] if "data" in names else 1,
+        "pod_size": mesh.shape["pod"] if "pod" in names else 1,
+        "multi_pod": "pod" in names,
+    }
+
+
+def batch_axes(mesh) -> tuple[str, ...]:
+    return ("pod", "data") if "pod" in mesh.axis_names else ("data",)

@@ -1,0 +1,363 @@
+"""Attention: GQA flash (chunked online-softmax), block-local/SWA, cross,
+and single-token decode — all pure JAX, GSPMD-shardable.
+
+Layout engineering is where the paper's library plugs in (DESIGN.md §4):
+head split/merge are §III-B permutes, the KV-cache prefill->decode layout
+swap is `rearrange.kv_cache_to_decode_layout`, fused-QKV splitting is a
+§III-C de-interlace.
+
+Shapes: q (B, Hq, Sq, D); k, v (B, Hkv, Skv, D); GQA groups G = Hq // Hkv.
+Softmax statistics are fp32 regardless of io dtype.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import rearrange as rr
+from repro.models import common
+from repro.utils.scanutil import maybe_scan
+
+Array = jax.Array
+
+NEG_INF = -1e30
+
+
+def _use_flash_kernel() -> bool:
+    import os
+
+    if os.environ.get("REPRO_FLASH_KERNEL", "") == "1":
+        return True
+    if os.environ.get("REPRO_FLASH_KERNEL", "") == "0":
+        return False
+    return jax.default_backend() == "tpu"
+
+
+def _group_q(q: Array, n_kv: int) -> Array:
+    b, hq, s, d = q.shape
+    return q.reshape(b, n_kv, hq // n_kv, s, d)
+
+
+def flash_attention(
+    q: Array,
+    k: Array,
+    v: Array,
+    *,
+    causal: bool = True,
+    chunk: int = 512,
+    q_offset: int = 0,
+) -> Array:
+    """Chunked online-softmax attention (never materializes Sq x Skv).
+
+    ``q_offset``: absolute position of q[.., 0, :] relative to k (for
+    prefill continuation / decode with cache).
+    """
+    b, hkv, skv, d = k.shape
+    import os
+
+    if os.environ.get("REPRO_ATTN_IDENTITY", "0") == "1":
+        # analysis-only: excise attention math so the marginal-unit diff
+        # isolates non-attention traffic; the fused kernel's DMA bytes are
+        # then added from kernels.flash.dma_bytes (EXPERIMENTS §Perf).
+        return q
+    if _use_flash_kernel():
+        # TPU fast path: the fused Pallas kernel (kernels/flash.py) keeps
+        # the logits tile in VMEM — §Perf hillclimb #1.
+        from repro.kernels import flash as flash_k
+
+        return flash_k.flash_attention(
+            q * (d ** -0.5), k, v, causal=causal,
+            block_q=min(512, q.shape[2]), block_k=min(512, skv),
+            interpret=jax.default_backend() != "tpu",
+        )
+    qg = _group_q(q, hkv)  # (B, Hkv, G, Sq, D)
+    sq = qg.shape[3]
+    chunk = min(chunk, skv)
+    n_chunks = -(-skv // chunk)
+    # pad KV to a chunk multiple so dynamic_slice never clamps (clamped
+    # slices would double-count trailing keys); padded keys are masked.
+    if n_chunks * chunk != skv:
+        pad = n_chunks * chunk - skv
+        k = jnp.pad(k, ((0, 0), (0, 0), (0, pad), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, 0), (0, pad), (0, 0)))
+    scale = d ** -0.5
+
+    q_pos = q_offset + jnp.arange(sq)
+
+    def body(carry, i):
+        m, l, acc = carry
+        kc = jax.lax.dynamic_slice_in_dim(k, i * chunk, chunk, axis=2)
+        vc = jax.lax.dynamic_slice_in_dim(v, i * chunk, chunk, axis=2)
+        s_log = common.feinsum("bhgqd,bhkd->bhgqk", qg, kc) * scale
+        k_pos = i * chunk + jnp.arange(chunk)
+        valid = k_pos < skv
+        if causal:
+            valid = (q_pos[:, None] >= k_pos[None, :]) & valid[None, :]
+            s_log = jnp.where(valid, s_log, NEG_INF)
+        else:
+            s_log = jnp.where(valid[None, :], s_log, NEG_INF)
+        m_new = jnp.maximum(m, s_log.max(axis=-1))
+        p = jnp.exp(s_log - m_new[..., None])
+        alpha = jnp.exp(m - m_new)
+        l_new = l * alpha + p.sum(axis=-1)
+        acc_new = acc * alpha[..., None] + common.feinsum(
+            "bhgqk,bhkd->bhgqd", p.astype(v.dtype), vc
+        )
+        return (m_new, l_new, acc_new), None
+
+    m0 = jnp.full(qg.shape[:-1], NEG_INF, jnp.float32)
+    l0 = jnp.zeros(qg.shape[:-1], jnp.float32)
+    acc0 = jnp.zeros(qg.shape, jnp.float32)
+    (m, l, acc), _ = maybe_scan(body, (m0, l0, acc0), jnp.arange(n_chunks))
+    out = acc / jnp.maximum(l[..., None], 1e-30)
+    return out.reshape(q.shape).astype(q.dtype)
+
+
+def local_attention(
+    q: Array, k: Array, v: Array, *, window: int
+) -> Array:
+    """Block-local sliding-window attention, O(S * 2w): queries in block i
+    attend to kv blocks {i-1, i} with a causal + window mask.  Sequences
+    are padded up to a window multiple (padded keys sit at future
+    positions, so causality masks them for every real query)."""
+    b, hkv, s, d = k.shape
+    w = window
+    s_orig = s
+    if s % w:
+        pad = w - s % w
+        q = jnp.pad(q, ((0, 0), (0, 0), (0, pad), (0, 0)))
+        k = jnp.pad(k, ((0, 0), (0, 0), (0, pad), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, 0), (0, pad), (0, 0)))
+        s = s + pad
+    qg = _group_q(q, hkv)
+    g = qg.shape[2]
+    nb = s // w
+    scale = d ** -0.5
+
+    qb = qg.reshape(b, hkv, g, nb, w, d)
+    kb = k.reshape(b, hkv, nb, w, d)
+    vb = v.reshape(b, hkv, nb, w, d)
+    # previous kv block (zeros for block 0)
+    kprev = jnp.concatenate([jnp.zeros_like(kb[:, :, :1]), kb[:, :, :-1]], axis=2)
+    vprev = jnp.concatenate([jnp.zeros_like(vb[:, :, :1]), vb[:, :, :-1]], axis=2)
+    k2 = jnp.concatenate([kprev, kb], axis=3)  # (B, Hkv, nb, 2w, D)
+    v2 = jnp.concatenate([vprev, vb], axis=3)
+
+    logits = common.feinsum("bhgnqd,bhnkd->bhgnqk", qb, k2) * scale
+    q_pos = jnp.arange(w)[:, None] + w  # position within the 2w strip
+    k_pos = jnp.arange(2 * w)[None, :]
+    mask = (q_pos >= k_pos) & (k_pos > q_pos - w)  # causal, within window
+    first_block = jnp.arange(nb)[:, None, None] == 0
+    valid = jnp.where(first_block, mask & (k_pos >= w), mask)
+    logits = jnp.where(valid[None, None, None], logits, NEG_INF)
+    p = jax.nn.softmax(logits, axis=-1)
+    out = common.feinsum("bhgnqk,bhnkd->bhgnqd", p.astype(v.dtype), v2)
+    return out.reshape(q.shape)[:, :, :s_orig].astype(q.dtype)
+
+
+def decode_attention(q1: Array, k: Array, v: Array, *, length: Array | None = None) -> Array:
+    """One-token decode: q1 (B, Hq, 1, D) vs cache (B, Hkv, S, D).
+
+    Written as plain reductions over S so GSPMD turns a sequence-sharded
+    cache (SP over 'model') into partial-softmax + all-reduce automatically.
+    ``length``: number of valid cache entries (mask the tail).
+    """
+    b, hkv, s, d = k.shape
+    qg = _group_q(q1, hkv)  # (B, Hkv, G, 1, D)
+    logits = common.feinsum("bhgqd,bhkd->bhgqk", qg, k) * (d ** -0.5)
+    if length is not None:
+        pos = jnp.arange(s)
+        logits = jnp.where(pos[None, None, None, None, :] < length, logits, NEG_INF)
+    p = jax.nn.softmax(logits, axis=-1)
+    out = common.feinsum("bhgqk,bhkd->bhgqd", p.astype(v.dtype), v)
+    return out.reshape(q1.shape).astype(q1.dtype)
+
+
+def cross_attention(q: Array, k: Array, v: Array) -> Array:
+    """Full (non-causal) cross attention; encoder/image keys are short, so
+    no chunking needed."""
+    b, hkv, skv, d = k.shape
+    qg = _group_q(q, hkv)
+    logits = common.feinsum("bhgqd,bhkd->bhgqk", qg, k) * (d ** -0.5)
+    p = jax.nn.softmax(logits, axis=-1)
+    out = common.feinsum("bhgqk,bhkd->bhgqd", p.astype(v.dtype), v)
+    return out.reshape(q.shape).astype(q.dtype)
+
+
+# ---------------------------------------------------------------------------
+# parameterized attention layer (init + apply + decode)
+# ---------------------------------------------------------------------------
+
+
+def attn_init(key, cfg, *, cross: bool = False) -> dict:
+    d = cfg.d_model
+    hd = cfg.head_dim_resolved
+    kq, kk, ko = jax.random.split(key, 3)
+    dt = cfg.np_dtype
+    p = {
+        "norm": common.norm_init(cfg.norm, d),
+        "w_o": common.truncated_normal_init(ko, (cfg.n_heads * hd, d), 1.0, dt),
+    }
+    if cross:
+        p["w_q"] = common.truncated_normal_init(kq, (d, cfg.n_heads * hd), 1.0, dt)
+        p["w_kv"] = common.truncated_normal_init(kk, (d, 2 * cfg.n_kv_heads * hd), 1.0, dt)
+    else:
+        fused = (cfg.n_heads + 2 * cfg.n_kv_heads) * hd
+        p["w_qkv"] = common.truncated_normal_init(kq, (d, fused), 1.0, dt)
+        if cfg.qkv_bias:
+            p["b_qkv"] = jnp.zeros((fused,), dt)
+    return p
+
+
+def _shard_qkv(cfg, q: Array, k: Array, v: Array):
+    """Attention sharding policy (set by the launcher via cfg.attn_shard):
+
+    head  — Q heads on 'model' (Megatron); K/V heads too when divisible,
+            replicated otherwise (GQA with few KV heads).
+    seq   — Q sequence-sharded on 'model', K/V replicated: the layout
+            fallback when head counts don't divide the model axis (e.g.
+            28 heads on a 16-way axis).  Without this GSPMD contraction-
+            shards head_dim and all-reduces the S^2 logits — catastrophic
+            (EXPERIMENTS.md §Perf iteration 1).
+    """
+    from repro.sharding.partition import BATCH, constrain
+    from jax.sharding import PartitionSpec as P
+
+    if cfg.attn_shard == "head":
+        q = constrain(q, P(BATCH, "model", None, None))
+        kv_ax = "model" if cfg.n_kv_heads == cfg.n_heads else None
+        k = constrain(k, P(BATCH, kv_ax, None, None))
+        v = constrain(v, P(BATCH, kv_ax, None, None))
+    elif cfg.attn_shard == "seq":
+        q = constrain(q, P(BATCH, None, "model", None))
+        k = constrain(k, P(BATCH, None, None, None))
+        v = constrain(v, P(BATCH, None, None, None))
+    return q, k, v
+
+
+def _project_qkv(p: dict, cfg, x: Array) -> tuple[Array, Array, Array]:
+    hd = cfg.head_dim_resolved
+    qkv = x @ p["w_qkv"]
+    if "b_qkv" in p:
+        qkv = qkv + p["b_qkv"]
+    q, k, v = rr.split_qkv(qkv, cfg.n_heads, cfg.n_kv_heads, hd)
+    b, s, _ = x.shape
+    q = rr.split_heads(q, cfg.n_heads)        # (B, Hq, S, D)
+    k = rr.split_heads(k, cfg.n_kv_heads)
+    v = rr.split_heads(v, cfg.n_kv_heads)
+    return _shard_qkv(cfg, q, k, v)
+
+
+def attn_apply(
+    p: dict,
+    cfg,
+    x: Array,
+    *,
+    kind: str = "full",  # full | swa | local | bidir
+    positions: Array | None = None,
+) -> Array:
+    from repro.sharding.partition import constrain, replicated_spec, residual_spec
+
+    h = common.apply_norm(cfg.norm, p["norm"], x)
+    if getattr(cfg, "sp", False):
+        h = constrain(h, replicated_spec(3))
+    q, k, v = _project_qkv(p, cfg, x=h)
+    s = x.shape[1]
+    pos = jnp.arange(s) if positions is None else positions
+    if cfg.use_rope:
+        q = common.apply_rope(q, pos, cfg.rope_theta)
+        k = common.apply_rope(k, pos, cfg.rope_theta)
+    if kind in ("swa", "local") and s > cfg.window:
+        o = local_attention(q, k, v, window=cfg.window)
+    elif kind == "bidir":
+        o = cross_attention(q, k, v)  # full bidirectional self-attn
+    else:
+        o = flash_attention(q, k, v, causal=True, chunk=cfg.attn_chunk)
+    out = rr.merge_heads(o) @ p["w_o"]
+    if getattr(cfg, "sp", False):
+        out = constrain(out, residual_spec(cfg, 3))
+    return x + out
+
+
+def attn_prefill(
+    p: dict, cfg, x: Array, *, kind: str = "full"
+) -> tuple[Array, dict]:
+    """Like apply, but also returns the decode-layout KV cache."""
+    from repro.sharding.partition import constrain, replicated_spec, residual_spec
+
+    h = common.apply_norm(cfg.norm, p["norm"], x)
+    if getattr(cfg, "sp", False):
+        h = constrain(h, replicated_spec(3))
+    q, k, v = _project_qkv(p, cfg, x=h)
+    s = x.shape[1]
+    pos = jnp.arange(s)
+    if cfg.use_rope:
+        q = common.apply_rope(q, pos, cfg.rope_theta)
+        k = common.apply_rope(k, pos, cfg.rope_theta)
+    if kind in ("swa", "local") and s > cfg.window:
+        o = local_attention(q, k, v, window=cfg.window)
+    else:
+        o = flash_attention(q, k, v, causal=True, chunk=cfg.attn_chunk)
+    proj = rr.merge_heads(o) @ p["w_o"]
+    if getattr(cfg, "sp", False):
+        proj = constrain(proj, residual_spec(cfg, 3))
+    out = x + proj
+    cache = {"k": k, "v": v}  # already (B, Hkv, S, D) decode layout
+    return out, cache
+
+
+def attn_decode(
+    p: dict, cfg, x1: Array, cache: dict, pos: Array, *, kind: str = "full"
+) -> tuple[Array, dict]:
+    """One-token decode. cache: k/v (B, Hkv, S_max, D) ring buffer; ``pos``
+    is the absolute position (int32 scalar).  For swa/local kinds S_max is
+    the window and the slot is pos % window."""
+    h = common.apply_norm(cfg.norm, p["norm"], x1)
+    q, k, v = _project_qkv(p, cfg, x=h)
+    if cfg.use_rope:
+        posv = pos[None] if pos.ndim == 0 else pos
+        q = common.apply_rope(q, posv, cfg.rope_theta)
+        k = common.apply_rope(k, posv, cfg.rope_theta)
+    s_max = cache["k"].shape[2]
+    slot = (pos % s_max) if kind in ("swa", "local") else pos
+    kc = jax.lax.dynamic_update_slice_in_dim(cache["k"], k, slot, axis=2)
+    vc = jax.lax.dynamic_update_slice_in_dim(cache["v"], v, slot, axis=2)
+    length = jnp.minimum(pos + 1, s_max)
+    o = decode_attention(q, kc, vc, length=length)
+    out = x1 + rr.merge_heads(o) @ p["w_o"]
+    return out, {"k": kc, "v": vc}
+
+
+def xattn_init(key, cfg) -> dict:
+    return attn_init(key, cfg, cross=True)
+
+
+def xattn_apply(p: dict, cfg, x: Array, kv_src: Array) -> Array:
+    """Cross-attention block (decoder x: (B,S,D), kv_src: (B,Skv,D))."""
+    hd = cfg.head_dim_resolved
+    h = common.apply_norm(cfg.norm, p["norm"], x)
+    q = rr.split_heads(h @ p["w_q"], cfg.n_heads)
+    kv = kv_src @ p["w_kv"]
+    k, v = jnp.split(kv, 2, axis=-1)
+    k = rr.split_heads(k, cfg.n_kv_heads)
+    v = rr.split_heads(v, cfg.n_kv_heads)
+    o = cross_attention(q, k, v)
+    return x + rr.merge_heads(o) @ p["w_o"]
+
+
+def xattn_cache(p: dict, cfg, kv_src: Array) -> dict:
+    """Precompute cross-attention K/V once (prefill) for decode reuse."""
+    kv = kv_src @ p["w_kv"]
+    k, v = jnp.split(kv, 2, axis=-1)
+    return {
+        "k": rr.split_heads(k, cfg.n_kv_heads),
+        "v": rr.split_heads(v, cfg.n_kv_heads),
+    }
+
+
+def xattn_decode(p: dict, cfg, x1: Array, cache: dict) -> Array:
+    h = common.apply_norm(cfg.norm, p["norm"], x1)
+    q = rr.split_heads(h @ p["w_q"], cfg.n_heads)
+    o = cross_attention(q, cache["k"], cache["v"])
+    return x1 + rr.merge_heads(o) @ p["w_o"]

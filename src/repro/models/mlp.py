@@ -1,0 +1,65 @@
+"""Dense MLP blocks (SwiGLU / GELU)."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import common
+
+Array = jax.Array
+
+
+def mlp_init(key, cfg, d_ff: int | None = None) -> dict:
+    d = cfg.d_model
+    f = d_ff or cfg.d_ff
+    dt = cfg.np_dtype
+    k1, k2, k3 = jax.random.split(key, 3)
+    p = {
+        "norm": common.norm_init(cfg.norm, d),
+        "w_up": common.truncated_normal_init(k1, (d, f), 1.0, dt),
+        "w_down": common.truncated_normal_init(k2, (f, d), 1.0, dt),
+    }
+    if cfg.act in ("swiglu", "geglu"):
+        p["w_gate"] = common.truncated_normal_init(k3, (d, f), 1.0, dt)
+    return p
+
+
+def _hidden(p: dict, act: str, h: Array) -> Array:
+    from jax.sharding import PartitionSpec as P
+
+    from repro.sharding.partition import BATCH, constrain
+
+    def ff(y):  # Megatron column-parallel activations: ff dim on 'model'
+        spec = P(*([BATCH] + [None] * (y.ndim - 2) + ["model"]))
+        return constrain(y, spec)
+
+    up = ff(h @ p["w_up"])
+    if act == "swiglu":
+        return jax.nn.silu(ff(h @ p["w_gate"])) * up
+    if act == "geglu":
+        return jax.nn.gelu(ff(h @ p["w_gate"])) * up
+    if act == "relu2":
+        r = jax.nn.relu(up)
+        return r * r
+    return jax.nn.gelu(up)
+
+
+def mlp_apply(p: dict, cfg, x: Array) -> Array:
+    from repro.sharding.partition import constrain, replicated_spec, residual_spec
+
+    h = common.apply_norm(cfg.norm, p["norm"], x)
+    if getattr(cfg, "sp", False):
+        # SP: gather the (bf16) normed activations, scatter the output sum
+        h = constrain(h, replicated_spec(x.ndim))
+    out = _hidden(p, cfg.act, h) @ p["w_down"]  # row-parallel
+    spec = residual_spec(cfg, x.ndim) if getattr(cfg, "sp", False) else None
+    out = constrain(out, spec) if spec is not None else constrain(
+        out, residual_spec(cfg, x.ndim)
+    )
+    return x + out
+
+
+def ffn_only(p: dict, cfg, h: Array) -> Array:
+    """The FFN body without norm/residual (used by MoE shared experts)."""
+    return _hidden(p, cfg.act, h) @ p["w_down"]

@@ -1,0 +1,180 @@
+"""Mixture-of-Experts layer: top-k router + two dispatch strategies.
+
+Dispatch IS the paper's index-set rearrangement (§III-A / DESIGN.md §4):
+
+* ``sort`` mode — tokens are permuted into expert-contiguous order with the
+  library's gather kernel (`kernels.gather_scatter.gather_rows`, scalar-
+  prefetched index table = constant-memory analogue), experts run as a
+  blocked einsum, and the inverse permutation restores order.  This is the
+  TPU-kernel path (single device / serving).
+* ``dense`` mode — capacity-bucketed one-hot dispatch/combine einsums
+  (the GSPMD-canonical formulation): expert axis sharded on 'model' turns
+  the dispatch einsum into an all-to-all.  This is the distributed path
+  and the one the dry-run compiles.
+
+Auxiliary load-balancing loss (Switch-style) is returned alongside.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import ops
+from repro.models import common, mlp
+
+Array = jax.Array
+
+
+def moe_init(key, cfg) -> dict:
+    mc = cfg.moe
+    d = cfg.d_model
+    f = mc.d_expert
+    dt = cfg.np_dtype
+    keys = jax.random.split(key, 6)
+    p = {
+        "norm": common.norm_init(cfg.norm, d),
+        "w_router": common.truncated_normal_init(keys[0], (d, mc.n_experts), 1.0, jnp.float32),
+        "w_up": common.truncated_normal_init(keys[1], (mc.n_experts, d, f), 1.0, dt),
+        "w_gate": common.truncated_normal_init(keys[2], (mc.n_experts, d, f), 1.0, dt),
+        "w_down": common.truncated_normal_init(keys[3], (mc.n_experts, f, d), 1.0, dt),
+    }
+    if mc.n_shared:
+        shared_cfg_ff = mc.d_expert * mc.n_shared
+        p["shared"] = mlp.mlp_init(keys[4], cfg, d_ff=shared_cfg_ff)
+    return p
+
+
+def _router(p: dict, mc, h2: Array) -> tuple[Array, Array, Array]:
+    """h2: (T, D) -> (gates (T,k), idx (T,k), aux_loss)."""
+    logits = (h2.astype(jnp.float32) @ p["w_router"]).astype(jnp.float32)
+    probs = jax.nn.softmax(logits, axis=-1)
+    gates, idx = jax.lax.top_k(probs, mc.top_k)
+    if mc.normalize_gates:
+        gates = gates / jnp.maximum(gates.sum(-1, keepdims=True), 1e-9)
+    # Switch aux loss: E * sum_e f_e * P_e
+    e = mc.n_experts
+    me = probs.mean(axis=0)  # (E,)
+    onehot = jax.nn.one_hot(idx[:, 0], e, dtype=jnp.float32)
+    ce = onehot.mean(axis=0)
+    aux = e * jnp.sum(me * ce)
+    return gates, idx, aux
+
+
+def _expert_ffn(p: dict, cfg, xe: Array) -> Array:
+    """xe: (E, C, D) -> (E, C, D), blocked per-expert einsums."""
+    up = jnp.einsum("ecd,edf->ecf", xe, p["w_up"])
+    gate = jnp.einsum("ecd,edf->ecf", xe, p["w_gate"])
+    hidden = jax.nn.silu(gate) * up if cfg.act == "swiglu" else jax.nn.gelu(up)
+    return jnp.einsum("ecf,efd->ecd", hidden, p["w_down"])
+
+
+def moe_dense(p: dict, cfg, x: Array, *, capacity: int | None = None) -> tuple[Array, Array]:
+    """Capacity-bucketed dispatch, GShard-style *grouped by sequence*:
+    capacity C = cf*S*k/E per batch row, so the dispatch one-hot is
+    (B, S, E, C) and dispatch FLOPs stay ~2.5*S^2*D per row (~6% of the
+    expert FFN) instead of scaling with GLOBAL tokens — a global capacity
+    makes dispatch O(T^2) (the 7500s collective term the dry-run caught,
+    EXPERIMENTS §Perf).  Expert axis shards on 'model' -> all-to-all."""
+    from jax.sharding import PartitionSpec as P
+
+    from repro.sharding.partition import BATCH, constrain
+
+    mc = cfg.moe
+    b0, s0, d = x.shape
+    h = common.apply_norm(cfg.norm, p["norm"], x)
+    if getattr(cfg, "sp", False):
+        h = constrain(h, P(BATCH, None, None))  # SP: gather before dispatch
+    gates, idx, aux = _router(p, mc, h.reshape(-1, d))
+    e, k = mc.n_experts, mc.top_k
+    # fixed-size token groups (true GShard): capacity must not grow with
+    # S, or the dispatch one-hots/einsums go quadratic at 32k+ prefill
+    g_size = s0
+    if s0 > 4096:
+        for cand in (4096, 2048, 1024):
+            if s0 % cand == 0:
+                g_size = cand
+                break
+    b = b0 * (s0 // g_size)
+    s = g_size
+    h = h.reshape(b, s, d)
+    gates = gates.reshape(b, s, k)
+    idx = idx.reshape(b, s, k)
+
+    cap = capacity or max(1, int(mc.capacity_factor * s * k / e))
+    cap = min(cap, s * k)
+    onehot = jax.nn.one_hot(idx, e, dtype=jnp.int32)            # (B, S, k, E)
+    flat = onehot.reshape(b, s * k, e)
+    pos = jnp.cumsum(flat, axis=1) - flat                        # rank per (row, expert)
+    pos = (pos.reshape(b, s, k, e) * onehot).sum(-1)             # (B, S, k)
+    keep = pos < cap
+    slot = jax.nn.one_hot(jnp.where(keep, pos, cap), cap + 1, dtype=h.dtype)[..., :-1]
+    oh = onehot.astype(h.dtype)
+    disp = jnp.einsum("bske,bskc->bsec", oh, slot)               # (B, S, E, C)
+    ge = oh * (gates * keep.astype(gates.dtype)).astype(h.dtype)[..., None]
+    comb = jnp.einsum("bske,bskc->bsec", ge, slot)
+
+    xe = jnp.einsum("bsec,bsd->ebcd", disp, h)                   # (E, B, C, D)
+    espec = "model" if mc.shard == "expert" else None
+    xe = constrain(xe, P(espec, BATCH, None, None))
+    up = jnp.einsum("ebcd,edf->ebcf", xe, p["w_up"])
+    gate = jnp.einsum("ebcd,edf->ebcf", xe, p["w_gate"])
+    if mc.shard == "ffn":
+        up = constrain(up, P(None, BATCH, None, "model"))
+        gate = constrain(gate, P(None, BATCH, None, "model"))
+    hidden = jax.nn.silu(gate) * up if cfg.act == "swiglu" else jax.nn.gelu(up)
+    ye = jnp.einsum("ebcf,efd->ebcd", hidden, p["w_down"])
+    ye = constrain(ye, P(espec, BATCH, None, None))
+    y = jnp.einsum("bsec,ebcd->bsd", comb, ye.astype(comb.dtype)).astype(x.dtype)
+    if "shared" in p:
+        y = y + mlp.ffn_only(p["shared"], cfg, h.reshape(-1, d)).reshape(b, s, d)
+    return x + y.reshape(b0, s0, d), aux
+
+
+def moe_sort(p: dict, cfg, x: Array, *, capacity: int | None = None) -> tuple[Array, Array]:
+    """Capacity-blocked gather dispatch through the library's index-set
+    kernels (paper §III-A): tokens are gathered into expert-contiguous
+    (E, C, D) blocks with a scalar-prefetched source table, experts run as
+    blocked einsums, and a second gather restores token order."""
+    mc = cfg.moe
+    b, s, d = x.shape
+    h = common.apply_norm(cfg.norm, p["norm"], x)
+    h2 = h.reshape(-1, d)
+    t = h2.shape[0]
+    gates, idx, aux = _router(p, mc, h2)
+
+    e, k = mc.n_experts, mc.top_k
+    cap = capacity or max(1, int(mc.capacity_factor * t * k / e))
+    onehot = jax.nn.one_hot(idx, e, dtype=jnp.int32)           # (T, k, E)
+    flat = onehot.reshape(t * k, e)
+    pos = jnp.cumsum(flat, axis=0) - flat
+    pos = (pos * flat).sum(-1).reshape(t, k)                   # rank in expert
+    keep = pos < cap
+
+    slot = idx * cap + pos                                     # (T, k) in [0, E*C)
+    slot_or_dump = jnp.where(keep, slot, e * cap).reshape(-1)  # dump slot at end
+    token_of = jnp.arange(t * k, dtype=jnp.int32) // k
+    # source table: slot -> source token row (sentinel row t = zeros)
+    src = jnp.full((e * cap + 1,), t, jnp.int32).at[slot_or_dump].set(token_of)
+    h2p = jnp.concatenate([h2, jnp.zeros((1, d), h2.dtype)], axis=0)
+    xs = ops.gather_rows(h2p, src[: e * cap])                  # (E*C, D) gather kernel
+    ye = _expert_ffn(p, cfg, xs.reshape(e, cap, d)).reshape(e * cap, d)
+    # gather back: token slot -> expert output row (dump -> zeros row)
+    yep = jnp.concatenate([ye, jnp.zeros((1, d), ye.dtype)], axis=0)
+    back = jnp.where(keep.reshape(-1), slot.reshape(-1), e * cap).astype(jnp.int32)
+    yk = ops.gather_rows(yep, back).reshape(t, k, d)
+    y = (yk * gates[..., None].astype(yk.dtype)).sum(axis=1).astype(x.dtype)
+    if "shared" in p:
+        y = y + mlp.ffn_only(p["shared"], cfg, h2)
+    return x + y.reshape(b, s, d), aux
+
+
+def moe_apply(p: dict, cfg, x: Array, *, capacity: int | None = None) -> tuple[Array, Array]:
+    if cfg.moe.dispatch == "sort":
+        return moe_sort(p, cfg, x, capacity=capacity)
+    return moe_dense(p, cfg, x, capacity=capacity)
+
+
+def decode_capacity(cfg, batch: int) -> int:
+    """Lossless capacity for decode: worst case all tokens -> one expert."""
+    return batch * cfg.moe.top_k

@@ -1,0 +1,107 @@
+"""RG-LRU recurrent block (Griffin / RecurrentGemma, arXiv:2402.19427).
+
+Block = norm -> {gate branch: linear+GeLU} * {rnn branch: linear ->
+causal depthwise conv1d (K=4) -> RG-LRU} -> output linear -> residual.
+
+The temporal conv is expressed through the library's 1-D stencil
+(`core.stencil.conv1d_depthwise`, a degenerate §III-D stencil); the linear
+recurrence h_t = a_t h_{t-1} + b_t runs as `jax.lax.associative_scan`
+(parallel prefix — GSPMD-friendly) for train/prefill and as a single
+fused step for decode.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import stencil as st
+from repro.models import common
+
+Array = jax.Array
+
+_C = 8.0  # RG-LRU exponent constant
+_CONV_K = 4
+
+
+def rglru_init(key, cfg) -> dict:
+    d = cfg.d_model
+    dt = cfg.np_dtype
+    ks = jax.random.split(key, 7)
+    return {
+        "norm": common.norm_init(cfg.norm, d),
+        "w_gate_branch": common.truncated_normal_init(ks[0], (d, d), 1.0, dt),
+        "w_rnn_in": common.truncated_normal_init(ks[1], (d, d), 1.0, dt),
+        "conv_w": common.truncated_normal_init(ks[2], (_CONV_K, d), 1.0, jnp.float32),
+        "w_a": common.truncated_normal_init(ks[3], (d, d), 1.0, jnp.float32),
+        "w_x": common.truncated_normal_init(ks[4], (d, d), 1.0, jnp.float32),
+        # Lambda init so that a = sigmoid(L)^c is in [0.9, 0.999]
+        "lam": jnp.asarray(
+            jnp.log(jnp.exp(-jnp.log(jnp.linspace(0.9, 0.999, d)) / _C) - 1.0) * -1.0,
+            jnp.float32,
+        ),
+        "w_out": common.truncated_normal_init(ks[5], (d, d), 1.0, dt),
+    }
+
+
+def _rglru_coeffs(p: dict, u: Array) -> tuple[Array, Array]:
+    """u: conv output (B, S, D) -> (a_t, b_t) of the recurrence (fp32)."""
+    uf = u.astype(jnp.float32)
+    r = jax.nn.sigmoid(uf @ p["w_a"])
+    i = jax.nn.sigmoid(uf @ p["w_x"])
+    log_a = -_C * r * jax.nn.softplus(-p["lam"])  # log sigmoid(lam)^(c*r)
+    a = jnp.exp(log_a)
+    b = jnp.sqrt(jnp.maximum(1.0 - jnp.exp(2.0 * log_a), 1e-9)) * (i * uf)
+    return a, b
+
+
+def rglru_apply(p: dict, cfg, x: Array, *, return_state: bool = False):
+    h = common.apply_norm(cfg.norm, p["norm"], x)
+    from jax.sharding import PartitionSpec as P
+    from repro.sharding.partition import BATCH, constrain
+    # channel-shard the recurrence on 'model' (elementwise over D -> the
+    # associative scan shards cleanly; D=2560 divides the 16-way axis)
+    gate = constrain(jax.nn.gelu(h @ p["w_gate_branch"]), P(BATCH, None, "model"))
+    u_in = constrain(h @ p["w_rnn_in"], P(BATCH, None, "model"))
+    u = st.conv1d_depthwise(u_in, p["conv_w"].astype(u_in.dtype))
+    a, b = _rglru_coeffs(p, u)
+
+    # parallel linear recurrence over S (axis 1)
+    def combine(l, r):
+        al, bl = l
+        ar, br = r
+        return al * ar, ar * bl + br
+
+    _, hs = jax.lax.associative_scan(combine, (a, b), axis=1)
+    y = (hs.astype(x.dtype) * gate) @ p["w_out"]
+    out = x + y
+    if return_state:
+        state = {
+            "h": hs[:, -1].astype(jnp.float32),
+            "conv": u_in[:, -(_CONV_K - 1):].astype(jnp.float32),
+        }
+        return out, state
+    return out
+
+
+def rglru_init_state(cfg, batch: int) -> dict:
+    d = cfg.d_model
+    return {
+        "h": jnp.zeros((batch, d), jnp.float32),
+        "conv": jnp.zeros((batch, _CONV_K - 1, d), jnp.float32),
+    }
+
+
+def rglru_decode(p: dict, cfg, x1: Array, state: dict) -> tuple[Array, dict]:
+    b, s, d = x1.shape  # s == 1
+    h = common.apply_norm(cfg.norm, p["norm"], x1)
+    gate = jax.nn.gelu(h @ p["w_gate_branch"])
+    u = (h @ p["w_rnn_in"])[:, 0].astype(jnp.float32)  # (B, D)
+    # sliding conv buffer: state["conv"] holds the last K-1 inputs
+    window = jnp.concatenate([state["conv"], u[:, None]], axis=1)  # (B, K, D)
+    uc = jnp.einsum("bkd,kd->bd", window, p["conv_w"])
+    a, bcoef = _rglru_coeffs(p, uc[:, None])
+    a, bcoef = a[:, 0], bcoef[:, 0]
+    h_new = a * state["h"] + bcoef
+    y = (h_new[:, None].astype(x1.dtype) * gate) @ p["w_out"]
+    return x1 + y, {"h": h_new, "conv": window[:, 1:]}

@@ -1,0 +1,206 @@
+"""xLSTM blocks (arXiv:2405.04517): mLSTM (matrix memory, parallelizable)
+and sLSTM (scalar memory, strictly recurrent).
+
+The mLSTM state update C_t = f C_{t-1} + i v k^T is itself a blocked
+rearrangement + rank-1 update; state layout (B, H, d, d) keeps the lane
+dim on the second d so both the update and the readout C q stay
+lane-aligned (DESIGN.md §7).  The sLSTM recurrence is sequential by
+construction — the paper's kernels apply to its state layout only.
+
+Both train paths run a `lax.scan` over time (O(S) with compact HLO);
+decode is the single-step body.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import common
+from repro.utils.scanutil import maybe_scan
+
+Array = jax.Array
+
+
+# ---------------------------------------------------------------------------
+# mLSTM
+# ---------------------------------------------------------------------------
+
+
+def mlstm_init(key, cfg) -> dict:
+    d = cfg.d_model
+    h = cfg.n_heads
+    dh = d // h
+    dt = cfg.np_dtype
+    ks = jax.random.split(key, 6)
+    return {
+        "norm": common.norm_init(cfg.norm, d),
+        "w_qkv": common.truncated_normal_init(ks[0], (d, 3 * d), 1.0, dt),
+        "w_if": common.truncated_normal_init(ks[1], (d, 2 * h), 1.0, jnp.float32),
+        "w_o_gate": common.truncated_normal_init(ks[2], (d, d), 1.0, dt),
+        "w_out": common.truncated_normal_init(ks[3], (d, d), 1.0, dt),
+    }
+
+
+def _mlstm_step(carry, inp, dh: int):
+    """carry: C (B,H,dh,dh), n (B,H,dh), m (B,H). inp: q,k,v (B,H,dh), i,f (B,H)."""
+    C, n, m = carry
+    q, k, v, ig, fg = inp
+    logf = jax.nn.log_sigmoid(fg)  # (B,H)
+    m_new = jnp.maximum(logf + m, ig)
+    i_p = jnp.exp(ig - m_new)
+    f_p = jnp.exp(logf + m - m_new)
+    kf = k.astype(jnp.float32) * (dh ** -0.5)
+    C_new = f_p[..., None, None] * C + i_p[..., None, None] * (
+        v.astype(jnp.float32)[..., :, None] * kf[..., None, :]
+    )
+    n_new = f_p[..., None] * n + i_p[..., None] * kf
+    qf = q.astype(jnp.float32)
+    num = jnp.einsum("bhvk,bhk->bhv", C_new, qf)
+    den = jnp.maximum(jnp.abs(jnp.einsum("bhk,bhk->bh", n_new, qf)), jnp.exp(-m_new))
+    h_t = num / den[..., None]
+    return (C_new, n_new, m_new), h_t
+
+
+def _mlstm_inputs(p: dict, cfg, x: Array):
+    b, s, d = x.shape
+    hn = cfg.n_heads
+    dh = d // hn
+    h = common.apply_norm(cfg.norm, p["norm"], x)
+    qkv = h @ p["w_qkv"]
+    q, k, v = jnp.split(qkv, 3, axis=-1)
+    gates = (h.astype(jnp.float32) @ p["w_if"]).reshape(b, s, 2, hn)
+    ig, fg = gates[:, :, 0], gates[:, :, 1]
+    shp = (b, s, hn, dh)
+    # recurrence runs data-parallel: replicate on 'model' before the scan
+    from jax.sharding import PartitionSpec as P
+    from repro.sharding.partition import BATCH, constrain
+    rep = lambda a: constrain(a, P(BATCH, *([None] * (a.ndim - 1))))
+    return h, rep(q.reshape(shp)), rep(k.reshape(shp)), rep(v.reshape(shp)), rep(ig), rep(fg)
+
+
+def mlstm_apply(p: dict, cfg, x: Array, *, return_state: bool = False):
+    b, s, d = x.shape
+    hn = cfg.n_heads
+    dh = d // hn
+    h, q, k, v, ig, fg = _mlstm_inputs(p, cfg, x)
+    # time-major for scan: (S, B, H, ...)
+    tm = lambda a: jnp.moveaxis(a, 1, 0)
+    C0 = jnp.zeros((b, hn, dh, dh), jnp.float32)
+    n0 = jnp.zeros((b, hn, dh), jnp.float32)
+    m0 = jnp.full((b, hn), -1e30, jnp.float32)
+    step = lambda c, i: _mlstm_step(c, i, dh)
+    (C, n, m), hs = maybe_scan(
+        step, (C0, n0, m0), (tm(q), tm(k), tm(v), tm(ig), tm(fg))
+    )
+    hs = jnp.moveaxis(hs, 0, 1).reshape(b, s, d).astype(x.dtype)  # (B,S,D)
+    gated = hs * jax.nn.sigmoid(h @ p["w_o_gate"])
+    out = x + gated @ p["w_out"]
+    if return_state:
+        return out, {"C": C, "n": n, "m": m}
+    return out
+
+
+def mlstm_init_state(cfg, batch: int) -> dict:
+    hn = cfg.n_heads
+    dh = cfg.d_model // hn
+    return {
+        "C": jnp.zeros((batch, hn, dh, dh), jnp.float32),
+        "n": jnp.zeros((batch, hn, dh), jnp.float32),
+        "m": jnp.full((batch, hn), -1e30, jnp.float32),
+    }
+
+
+def mlstm_decode(p: dict, cfg, x1: Array, state: dict) -> tuple[Array, dict]:
+    b, s, d = x1.shape  # s == 1
+    hn = cfg.n_heads
+    dh = d // hn
+    h, q, k, v, ig, fg = _mlstm_inputs(p, cfg, x1)
+    sq = lambda a: a[:, 0]
+    (C, n, m), h_t = _mlstm_step(
+        (state["C"], state["n"], state["m"]),
+        (sq(q), sq(k), sq(v), sq(ig), sq(fg)),
+        dh,
+    )
+    hs = h_t.reshape(b, 1, d).astype(x1.dtype)
+    gated = hs * jax.nn.sigmoid(h @ p["w_o_gate"])
+    return x1 + gated @ p["w_out"], {"C": C, "n": n, "m": m}
+
+
+# ---------------------------------------------------------------------------
+# sLSTM
+# ---------------------------------------------------------------------------
+
+
+def slstm_init(key, cfg) -> dict:
+    d = cfg.d_model
+    hn = cfg.n_heads
+    dh = d // hn
+    dt = cfg.np_dtype
+    ks = jax.random.split(key, 3)
+    return {
+        "norm": common.norm_init(cfg.norm, d),
+        "w_zifo": common.truncated_normal_init(ks[0], (d, 4 * d), 1.0, dt),
+        # block-diagonal recurrent weights: per-head (dh, 4*dh)
+        "r_zifo": common.truncated_normal_init(ks[1], (hn, dh, 4 * dh), 1.0, jnp.float32),
+        "w_out": common.truncated_normal_init(ks[2], (d, d), 1.0, dt),
+    }
+
+
+def _slstm_step(p, cfg, carry, wx_t):
+    """carry: h,c,n (B,H,dh), m (B,H,dh). wx_t: (B, 4D) pre-projected."""
+    h_prev, c, n, m = carry
+    b = h_prev.shape[0]
+    hn = cfg.n_heads
+    dh = cfg.d_model // hn
+    rec = jnp.einsum("bhd,hde->bhe", h_prev, p["r_zifo"])  # (B,H,4dh)
+    pre = wx_t.reshape(b, hn, 4 * dh).astype(jnp.float32) + rec
+    z, ig, fg, og = jnp.split(pre, 4, axis=-1)
+    logf = jax.nn.log_sigmoid(fg)
+    m_new = jnp.maximum(logf + m, ig)
+    i_p = jnp.exp(ig - m_new)
+    f_p = jnp.exp(logf + m - m_new)
+    c_new = f_p * c + i_p * jnp.tanh(z)
+    n_new = f_p * n + i_p
+    h_new = jax.nn.sigmoid(og) * c_new / jnp.maximum(n_new, 1e-6)
+    return (h_new, c_new, n_new, m_new), h_new
+
+
+def slstm_apply(p: dict, cfg, x: Array, *, return_state: bool = False):
+    b, s, d = x.shape
+    hn = cfg.n_heads
+    dh = d // hn
+    h = common.apply_norm(cfg.norm, p["norm"], x)
+    from jax.sharding import PartitionSpec as P
+    from repro.sharding.partition import BATCH, constrain
+    wx = constrain(h @ p["w_zifo"], P(BATCH, None, None))  # (B,S,4D) replicated-model
+    carry0 = (
+        jnp.zeros((b, hn, dh), jnp.float32),
+        jnp.zeros((b, hn, dh), jnp.float32),
+        jnp.zeros((b, hn, dh), jnp.float32),
+        jnp.full((b, hn, dh), -1e30, jnp.float32),
+    )
+    step = lambda c, i: _slstm_step(p, cfg, c, i)
+    (hf, cf, nf, mf), hs = maybe_scan(step, carry0, jnp.moveaxis(wx, 1, 0))
+    hs = jnp.moveaxis(hs, 0, 1).reshape(b, s, d).astype(x.dtype)
+    out = x + hs @ p["w_out"]
+    if return_state:
+        return out, {"h": hf, "c": cf, "n": nf, "m": mf}
+    return out
+
+
+def slstm_init_state(cfg, batch: int) -> dict:
+    hn = cfg.n_heads
+    dh = cfg.d_model // hn
+    z = lambda: jnp.zeros((batch, hn, dh), jnp.float32)
+    return {"h": z(), "c": z(), "n": z(), "m": jnp.full((batch, hn, dh), -1e30, jnp.float32)}
+
+
+def slstm_decode(p: dict, cfg, x1: Array, state: dict) -> tuple[Array, dict]:
+    b, s, d = x1.shape
+    h = common.apply_norm(cfg.norm, p["norm"], x1)
+    wx = (h @ p["w_zifo"])[:, 0]
+    carry = (state["h"], state["c"], state["n"], state["m"])
+    (h_new, c, n, m), hs = _slstm_step(p, cfg, carry, wx)
+    out = x1 + hs.reshape(b, 1, d).astype(x1.dtype) @ p["w_out"]
+    return out, {"h": h_new, "c": c, "n": n, "m": m}

@@ -1,0 +1,137 @@
+"""Batched serving engine: prefill + decode with slot-based continuous
+batching over the ring-buffer KV caches.
+
+The engine owns B fixed slots.  Requests are prefilled (building each
+layer's decode-layout cache via the library's KV permute — DESIGN.md §4)
+and written into a free slot; every engine step decodes one token for
+all live slots; finished slots are immediately reusable.  Static shapes
+throughout: one compiled prefill per prompt bucket, one compiled decode.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models import transformer as tf
+
+Array = jax.Array
+
+
+@dataclass
+class Request:
+    rid: int
+    prompt: np.ndarray  # (S,) int32
+    max_new: int = 32
+    out: list = field(default_factory=list)
+    done: bool = False
+
+
+class Engine:
+    def __init__(self, cfg, params, *, batch_slots: int = 4, s_max: int = 256,
+                 prompt_bucket: int = 64):
+        self.cfg = cfg
+        self.params = params
+        self.b = batch_slots
+        self.s_max = s_max
+        self.bucket = prompt_bucket
+        self.cache = tf.init_cache(cfg, batch_slots, s_max)
+        self.pos = np.zeros(batch_slots, np.int32)  # per-slot next position
+        self.live: list[Request | None] = [None] * batch_slots
+        self.frontend = None
+        self._decode = jax.jit(
+            lambda p, tok, cache, pos: tf.decode_step(p, cfg, tok, cache, pos)
+        )
+        self._prefill = jax.jit(
+            lambda p, toks: tf.prefill(p, cfg, toks)
+        )
+
+    # -- admission -----------------------------------------------------------
+
+    def _free_slot(self) -> int | None:
+        for i, r in enumerate(self.live):
+            if r is None:
+                return i
+        return None
+
+    def admit(self, req: Request) -> bool:
+        """Prefill a request into a free slot (single-row prefill)."""
+        slot = self._free_slot()
+        if slot is None:
+            return False
+        s = len(req.prompt)
+        pad = -(-s // self.bucket) * self.bucket
+        toks = np.zeros((1, pad), np.int32)
+        toks[0, pad - s :] = req.prompt  # left-pad into the bucket
+        logits, cache1 = self._prefill(self.params, jnp.asarray(toks))
+        # copy the single-row cache into the slot (KV rows land at [0, pad))
+        self.cache = _write_slot(self.cache, cache1, slot, self.s_max)
+        self.pos[slot] = pad
+        req.out.append(int(np.argmax(np.asarray(logits)[0])))
+        self.live[slot] = req
+        return True
+
+    # -- stepping ------------------------------------------------------------
+
+    def step(self) -> int:
+        """Decode one token for every live slot; returns #live."""
+        live_ix = [i for i, r in enumerate(self.live) if r is not None]
+        if not live_ix:
+            return 0
+        toks = np.zeros((self.b,), np.int32)
+        for i in live_ix:
+            toks[i] = self.live[i].out[-1]
+        # engine-level position: slots decode at their own pos; the compiled
+        # step takes a single pos scalar, so we step the max and mask via
+        # per-slot cache lengths (ring caches make stale rows harmless).
+        pos = int(self.pos[live_ix].max() if hasattr(self.pos, "max") else 0)
+        logits, self.cache = self._decode(
+            self.params, jnp.asarray(toks), self.cache, jnp.int32(pos)
+        )
+        lg = np.asarray(logits)
+        for i in live_ix:
+            r = self.live[i]
+            r.out.append(int(np.argmax(lg[i])))
+            self.pos[i] += 1
+            if len(r.out) >= r.max_new:
+                r.done = True
+                self.live[i] = None
+        return len(live_ix)
+
+    def run(self, requests: list[Request]) -> list[Request]:
+        pending = list(requests)
+        done: list[Request] = []
+        while pending or any(r is not None for r in self.live):
+            while pending and self.admit(pending[0]):
+                pending.pop(0)
+            self.step()
+            done = [r for r in requests if r.done]
+        return done
+
+
+def _write_slot(cache, cache1, slot: int, s_max: int):
+    """Copy a 1-row prefill cache into slot ``slot`` of the engine cache,
+    padding KV sequence dims up to s_max."""
+
+    def merge(dst, src):
+        if isinstance(dst, dict):
+            return {k: merge(dst[k], src[k]) for k in dst}
+        if isinstance(dst, list):
+            return [merge(a, b) for a, b in zip(dst, src)]
+        # dst (count, B, ...), src (count, 1, ...)
+        if dst.ndim >= 3 and src.shape[1] == 1:
+            row = src[:, 0]
+            target = dst.shape[:1] + dst.shape[2:]  # slot slice shape
+            if row.shape != target:
+                # KV ring buffers: prefill wrote fewer sequence rows; pad
+                # the seq axis (-2) up to the engine's s_max
+                pad = [(0, 0)] * row.ndim
+                pad[-2] = (0, target[-2] - row.shape[-2])
+                row = jnp.pad(row, pad)
+            return dst.at[:, slot].set(row.astype(dst.dtype))
+        return dst
+
+    return merge(cache, cache1)

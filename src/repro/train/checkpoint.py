@@ -1,0 +1,151 @@
+"""Checkpointing: async, atomic, elastic-restore.
+
+Layout: <dir>/step_<N>/
+  manifest.json   — flat path -> {shape, dtype, file}, plus step + config
+  <leaf>.npy      — one file per pytree leaf (host-gathered)
+
+Fault-tolerance properties:
+  * atomic publish — written to step_<N>.tmp, fsync'd, then os.rename;
+    a crash mid-write never corrupts the latest checkpoint;
+  * async — the save runs on a worker thread over host copies, so the
+    train loop donates its buffers and keeps stepping;
+  * elastic restore — leaves are loaded host-side and device_put with
+    whatever shardings the NEW mesh prescribes (the mesh may have a
+    different data-axis size than the one that saved);
+  * retention — keep_last newest checkpoints survive, older are pruned.
+"""
+
+from __future__ import annotations
+
+import json
+import os
+import shutil
+import threading
+from pathlib import Path
+
+import jax
+import ml_dtypes
+import numpy as np
+
+# numpy can't serialize bfloat16 natively: store as uint16 + logical dtype
+_EXOTIC = {"bfloat16": np.uint16, "float8_e4m3fn": np.uint8, "float8_e5m2": np.uint8}
+
+
+def _flatten(tree, prefix=""):
+    if isinstance(tree, dict):
+        for k in sorted(tree):
+            yield from _flatten(tree[k], f"{prefix}/{k}" if prefix else str(k))
+    elif isinstance(tree, (list, tuple)):
+        for i, v in enumerate(tree):
+            yield from _flatten(v, f"{prefix}/{i}")
+    else:
+        yield prefix, tree
+
+
+def _unflatten_into(skeleton, flat: dict, prefix=""):
+    if isinstance(skeleton, dict):
+        return {
+            k: _unflatten_into(v, flat, f"{prefix}/{k}" if prefix else str(k))
+            for k, v in skeleton.items()
+        }
+    if isinstance(skeleton, (list, tuple)):
+        t = [
+            _unflatten_into(v, flat, f"{prefix}/{i}")
+            for i, v in enumerate(skeleton)
+        ]
+        return type(skeleton)(t)
+    return flat[prefix]
+
+
+class Checkpointer:
+    def __init__(self, directory: str, *, keep_last: int = 3, async_save: bool = True):
+        self.dir = Path(directory)
+        self.dir.mkdir(parents=True, exist_ok=True)
+        self.keep_last = keep_last
+        self.async_save = async_save
+        self._thread: threading.Thread | None = None
+
+    # -- save ---------------------------------------------------------------
+
+    def save(self, step: int, tree) -> None:
+        # host-gather while the caller still owns the buffers
+        host = {p: np.asarray(jax.device_get(l)) for p, l in _flatten(tree)}
+        if self.async_save:
+            self.wait()
+            self._thread = threading.Thread(
+                target=self._write, args=(step, host), daemon=True
+            )
+            self._thread.start()
+        else:
+            self._write(step, host)
+
+    def wait(self) -> None:
+        if self._thread is not None:
+            self._thread.join()
+            self._thread = None
+
+    def _write(self, step: int, host: dict) -> None:
+        final = self.dir / f"step_{step:08d}"
+        tmp = self.dir / f"step_{step:08d}.tmp"
+        if tmp.exists():
+            shutil.rmtree(tmp)
+        tmp.mkdir(parents=True)
+        manifest = {"step": step, "leaves": {}}
+        for i, (path, arr) in enumerate(host.items()):
+            fname = f"leaf_{i:05d}.npy"
+            logical = str(arr.dtype)
+            if logical in _EXOTIC:
+                np.save(tmp / fname, arr.view(_EXOTIC[logical]))
+            else:
+                np.save(tmp / fname, arr)
+            manifest["leaves"][path] = {
+                "file": fname,
+                "shape": list(arr.shape),
+                "dtype": logical,
+            }
+        with open(tmp / "manifest.json", "w") as f:
+            json.dump(manifest, f)
+            f.flush()
+            os.fsync(f.fileno())
+        if final.exists():
+            shutil.rmtree(final)
+        os.rename(tmp, final)
+        self._prune()
+
+    def _prune(self) -> None:
+        steps = self.all_steps()
+        for s in steps[: -self.keep_last]:
+            shutil.rmtree(self.dir / f"step_{s:08d}", ignore_errors=True)
+
+    # -- restore ------------------------------------------------------------
+
+    def all_steps(self) -> list[int]:
+        out = []
+        for p in self.dir.glob("step_*"):
+            if p.suffix == ".tmp" or not (p / "manifest.json").exists():
+                continue
+            out.append(int(p.name.split("_")[1]))
+        return sorted(out)
+
+    def latest_step(self) -> int | None:
+        steps = self.all_steps()
+        return steps[-1] if steps else None
+
+    def restore(self, step: int, skeleton, shardings=None):
+        """Load into the structure of ``skeleton``; device_put with
+        ``shardings`` (same pytree structure) when given — this is the
+        elastic-resharding path."""
+        d = self.dir / f"step_{step:08d}"
+        manifest = json.loads((d / "manifest.json").read_text())
+        flat = {}
+        for path, meta in manifest["leaves"].items():
+            arr = np.load(d / meta["file"])
+            if meta["dtype"] in _EXOTIC:
+                arr = arr.view(getattr(ml_dtypes, meta["dtype"]))
+            flat[path] = arr
+        tree = _unflatten_into(skeleton, flat)
+        if shardings is not None:
+            tree = jax.tree.map(
+                lambda leaf, sh: jax.device_put(leaf, sh), tree, shardings
+            )
+        return tree

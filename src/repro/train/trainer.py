@@ -1,0 +1,77 @@
+"""Training step factory: grad-accumulation microbatching, fp32 grad
+accumulators, AdamW update, metrics.
+
+Gradient accumulation is the memory-term lever (EXPERIMENTS.md §Perf):
+activation temp scales with the microbatch, while the collective term is
+unchanged (grads are reduced once per step, after accumulation).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.models import transformer as tf
+from repro.optim import adamw
+from repro.sharding import partition
+from repro.utils.scanutil import maybe_scan
+
+
+def make_train_step(cfg, oc: adamw.OptConfig, mesh, *, accum_steps: int = 1):
+    bspec = partition.residual_spec(cfg) if mesh is not None else None
+
+    def lossf(p, batch):
+        return tf.loss_fn(
+            p,
+            cfg,
+            batch["tokens"],
+            batch["labels"],
+            frontend=batch.get("frontend"),
+            batch_spec=bspec,
+        )
+
+    def train_step(params, opt_state, batch):
+        if accum_steps == 1:
+            loss, grads = jax.value_and_grad(lossf)(params, batch)
+        else:
+            micro = jax.tree.map(
+                lambda x: x.reshape(accum_steps, x.shape[0] // accum_steps, *x.shape[1:]),
+                batch,
+            )
+
+            def body(carry, mb):
+                gsum, lsum = carry
+                loss, grads = jax.value_and_grad(lossf)(params, mb)
+                gsum = jax.tree.map(
+                    lambda a, g: a + g.astype(jnp.float32), gsum, grads
+                )
+                return (gsum, lsum + loss), None
+
+            g0 = jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)
+            (gsum, lsum), _ = maybe_scan(
+                body, (g0, jnp.zeros((), jnp.float32)), micro
+            )
+            grads = jax.tree.map(lambda g: g / accum_steps, gsum)
+            loss = lsum / accum_steps
+        params2, opt2, metrics = adamw.update(params, grads, opt_state, oc)
+        metrics["loss"] = loss
+        return params2, opt2, metrics
+
+    return train_step
+
+
+def make_eval_step(cfg, mesh):
+    bspec = partition.residual_spec(cfg) if mesh is not None else None
+
+    def eval_step(params, batch):
+        return tf.loss_fn(
+            params,
+            cfg,
+            batch["tokens"],
+            batch["labels"],
+            frontend=batch.get("frontend"),
+            batch_spec=bspec,
+        )
+
+    return eval_step

@@ -1,0 +1,109 @@
+"""HLO text analysis: collective-traffic accounting for the roofline.
+
+``cost_analysis()`` has no collective term, so we parse the optimized HLO
+(post-SPMD, per-device program) and charge each collective its per-device
+link traffic:
+
+  all-gather          result_bytes           (each device receives ~N)
+  reduce-scatter      operand_bytes          (each device sends ~N)
+  all-reduce          2 * operand_bytes      (ring: reduce-scatter + all-gather)
+  all-to-all          operand_bytes
+  collective-permute  operand_bytes
+
+'-start' variants are counted, '-done' ignored.  Shapes of operands are
+resolved through a name->shape map built from the whole module.
+"""
+
+from __future__ import annotations
+
+import re
+from collections import defaultdict
+
+_DTYPE_BYTES = {
+    "pred": 1, "s4": 1, "u4": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2,
+    "s32": 4, "u32": 4, "s64": 8, "u64": 8, "f8e4m3fn": 1, "f8e5m2": 1,
+    "bf16": 2, "f16": 2, "f32": 4, "f64": 8, "c64": 8, "c128": 16,
+}
+
+_SHAPE_RE = re.compile(r"\b([a-z0-9]+)\[([\d,]*)\]")
+_DEF_RE = re.compile(r"^\s*(?:ROOT\s+)?(%?[\w.\-]+)\s*=\s*(.*)$")
+_COLLECTIVES = (
+    "all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+    "collective-permute",
+)
+
+
+def _shape_bytes(dtype: str, dims: str) -> int:
+    n = 1
+    if dims.strip():
+        for d in dims.split(","):
+            n *= int(d)
+    return n * _DTYPE_BYTES.get(dtype, 4)
+
+
+def _first_shapes_bytes(text: str) -> int:
+    """Total bytes of all array shapes in a type string (handles tuples)."""
+    return sum(_shape_bytes(dt, dims) for dt, dims in _SHAPE_RE.findall(text))
+
+
+def collective_stats(hlo_text: str) -> dict:
+    """Per-device collective traffic (bytes) by op kind + totals."""
+    # name -> result bytes
+    sizes: dict[str, int] = {}
+    for line in hlo_text.splitlines():
+        m = _DEF_RE.match(line)
+        if not m:
+            continue
+        name, rhs = m.groups()
+        type_part = rhs.split(" ", 1)[0] if " " in rhs else rhs
+        # result type = everything before the op name; just grab shapes
+        # appearing before the first '(' (the instruction's result type)
+        head = rhs.split("(", 1)[0]
+        b = _first_shapes_bytes(head)
+        if b:
+            sizes[name.lstrip("%")] = b
+
+    traffic = defaultdict(int)
+    counts = defaultdict(int)
+    for line in hlo_text.splitlines():
+        m = _DEF_RE.match(line)
+        if not m:
+            continue
+        name, rhs = m.groups()
+        opm = re.search(r"\b([a-z\-]+)\(", rhs)
+        if not opm:
+            continue
+        op = opm.group(1)
+        base = op
+        for c in _COLLECTIVES:
+            if op == c or op == c + "-start":
+                base = c
+                break
+        else:
+            continue
+        if op.endswith("-done"):
+            continue
+        result_bytes = _first_shapes_bytes(rhs.split("(", 1)[0])
+        # operand bytes: resolve %refs inside parens; fall back to inline types
+        paren = rhs[rhs.index("(") :]
+        operand_bytes = 0
+        for ref in re.findall(r"%([\w.\-]+)", paren.split("),", 1)[0]):
+            operand_bytes += sizes.get(ref, 0)
+        if operand_bytes == 0:
+            inner = paren.split("),", 1)[0]
+            operand_bytes = _first_shapes_bytes(inner)
+        if base == "all-gather":
+            cost = result_bytes
+        elif base == "all-reduce":
+            cost = 2 * operand_bytes
+        elif base == "reduce-scatter":
+            cost = operand_bytes
+        else:
+            cost = operand_bytes
+        traffic[base] += cost
+        counts[base] += 1
+    return {
+        "bytes_by_kind": dict(traffic),
+        "counts": dict(counts),
+        "total_bytes": sum(traffic.values()),
+    }

@@ -1,0 +1,104 @@
+"""Generate the EXPERIMENTS.md §Dry-run / §Roofline tables from the
+dry-run JSON records.
+
+  PYTHONPATH=src python -m repro.utils.report [--dir runs/dryrun]
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+from pathlib import Path
+
+
+def load(d: Path) -> list[dict]:
+    return [json.loads(f.read_text()) for f in sorted(d.glob("*.json"))]
+
+
+def fmt_bytes(b) -> str:
+    if b is None:
+        return "-"
+    return f"{b/2**30:.2f}"
+
+
+def dryrun_table(records: list[dict]) -> str:
+    lines = [
+        "| arch | cell | status | compile s | peak GB/dev | temp GB/dev | collectives (scan-mode HLO) |",
+        "|---|---|---|---|---|---|---|",
+    ]
+    for r in records:
+        if r.get("status") == "skipped":
+            lines.append(
+                f"| {r['arch']} | {r['cell']} | skipped | - | - | - | {r.get('reason','')[:70]} |"
+            )
+            continue
+        if r.get("status") != "ok":
+            lines.append(
+                f"| {r['arch']} | {r['cell']} | ERROR | - | - | - | {r.get('error','')[:70]} |"
+            )
+            continue
+        mem = r.get("memory", {})
+        coll = r.get("collectives_scan_mode", {}).get("counts", {})
+        coll_s = " ".join(f"{k.split('-')[1] if '-' in k else k}:{v}" for k, v in sorted(coll.items()))
+        peak = (mem.get("argument_bytes") or 0) + (mem.get("temp_bytes") or 0)
+        lines.append(
+            f"| {r['arch']} | {r['cell']} | ok | {r.get('compile_s','-')} "
+            f"| {fmt_bytes(peak)} | {fmt_bytes(mem.get('temp_bytes'))} | {coll_s} |"
+        )
+    return "\n".join(lines)
+
+
+def roofline_table(records: list[dict]) -> str:
+    lines = [
+        "| arch | cell | compute s | memory s | collective s | bottleneck | step s | useful_ratio | mfu_bound |",
+        "|---|---|---|---|---|---|---|---|---|",
+    ]
+    for r in records:
+        if "roofline" not in r:
+            if r.get("status") == "skipped":
+                lines.append(f"| {r['arch']} | {r['cell']} | - | - | - | skipped | - | - | - |")
+            continue
+        x = r["roofline"]
+        lines.append(
+            f"| {r['arch']} | {r['cell']} | {x['compute_s']:.3f} | {x['memory_s']:.3f} "
+            f"| {x['collective_s']:.3f} | **{x['bottleneck']}** | {x['step_time_s']:.3f} "
+            f"| {x['useful_flops_ratio']:.2f} | {x['mfu_bound']:.3f} |"
+        )
+    return "\n".join(lines)
+
+
+def pick_hillclimb(records: list[dict]) -> list[str]:
+    """worst mfu_bound, most collective-bound, most paper-representative."""
+    ok = [r for r in records if "roofline" in r]
+    if not ok:
+        return []
+    worst = min(ok, key=lambda r: r["roofline"]["mfu_bound"])
+    coll = max(ok, key=lambda r: r["roofline"]["collective_s"] / max(r["roofline"]["step_time_s"], 1e-9))
+    moe = [r for r in ok if "moe" in r["arch"]]
+    rep = max(moe, key=lambda r: r["roofline"]["step_time_s"]) if moe else ok[0]
+    out = []
+    for tag, r in [("worst-mfu", worst), ("most-collective", coll), ("paper-representative(MoE dispatch)", rep)]:
+        out.append(f"{tag}: {r['arch']} x {r['cell']} (bottleneck={r['roofline']['bottleneck']})")
+    return out
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--dir", default="runs/dryrun")
+    args = ap.parse_args()
+    single = load(Path(args.dir) / "single")
+    print("## Dry-run (single-pod 16x16)\n")
+    print(dryrun_table(single))
+    multi_dir = Path(args.dir) / "multi"
+    if multi_dir.exists():
+        print("\n## Dry-run (multi-pod 2x16x16)\n")
+        print(dryrun_table(load(multi_dir)))
+    print("\n## Roofline (single-pod, per-device terms)\n")
+    print(roofline_table(single))
+    print("\n## Suggested hillclimb pairs\n")
+    for line in pick_hillclimb(single):
+        print("-", line)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,41 @@
+"""Scan wrapper: lax.scan in production, bounded unroll for analysis.
+
+XLA's ``cost_analysis()`` counts a ``while`` body exactly once, so any
+scanned computation under-reports flops/bytes/collectives by its trip
+count.  The dry-run's *analysis lowerings* set REPRO_UNROLL_SCANS=1 so
+every library scan fully unrolls (they are all short in the reduced-unit
+analysis configs) and the compiled HLO contains no loops at all.
+"""
+
+from __future__ import annotations
+
+import os
+
+import jax
+import jax.numpy as jnp
+
+
+def unroll_scans() -> bool:
+    return os.environ.get("REPRO_UNROLL_SCANS", "0") == "1"
+
+
+def maybe_scan(body, init, xs, *, length: int | None = None):
+    """Drop-in for jax.lax.scan(body, init, xs) honoring the unroll flag."""
+    if not unroll_scans():
+        return jax.lax.scan(body, init, xs, length=length)
+    if xs is None:
+        n = length
+        slices = [None] * n
+    else:
+        n = length or jax.tree.leaves(xs)[0].shape[0]
+        slices = [jax.tree.map(lambda l: l[i], xs) for i in range(n)]
+    carry = init
+    ys = []
+    for i in range(n):
+        carry, y = body(carry, slices[i])
+        ys.append(y)
+    if ys and ys[0] is not None:
+        ys_st = jax.tree.map(lambda *ls: jnp.stack(ls), *ys)
+    else:
+        ys_st = None
+    return carry, ys_st

@@ -1,0 +1,12 @@
+import os
+
+# Kernel tests exercise the Pallas implementations in interpret mode.
+# This is per-test opt-in via the `pallas_interpret` fixture — NOT global —
+# so model smoke tests see the default dispatch (jnp oracle on CPU).
+import pytest
+
+
+@pytest.fixture
+def pallas_interpret(monkeypatch):
+    monkeypatch.setenv("REPRO_PALLAS_INTERPRET", "1")
+    yield

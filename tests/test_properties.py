@@ -1,0 +1,119 @@
+"""Property-based tests (hypothesis) on the library's invariants."""
+
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.core import layout
+from repro.core.plan import plan_rearrange
+from repro.kernels import ops, ref
+
+settings.register_profile("ci", max_examples=50, deadline=None)
+settings.load_profile("ci")
+
+
+def perms(n):
+    return st.permutations(list(range(n)))
+
+
+shapes_and_perms = st.integers(2, 5).flatmap(
+    lambda n: st.tuples(
+        st.tuples(*[st.integers(1, 6) for _ in range(n)]),
+        st.permutations(list(range(n))),
+    )
+)
+
+
+@given(st.integers(1, 6).flatmap(perms))
+def test_paper_order_perm_roundtrip(order):
+    perm = layout.paper_order_to_perm(order)
+    assert sorted(perm) == list(range(len(order)))
+    back = layout.perm_to_paper_order(perm)
+    assert tuple(back) == tuple(order)
+
+
+@given(st.integers(1, 6).flatmap(perms))
+def test_invert_perm(perm):
+    inv = layout.invert_perm(perm)
+    assert layout.compose_perm(perm, inv) == tuple(range(len(perm)))
+    assert layout.compose_perm(inv, perm) == tuple(range(len(perm)))
+
+
+@given(shapes_and_perms)
+def test_coalesce_preserves_semantics(sp):
+    shape, perm = sp
+    x = np.arange(int(np.prod(shape))).reshape(shape)
+    want = np.transpose(x, perm)
+    cshape, cperm, _ = layout.coalesce(shape, perm)
+    got = np.transpose(x.reshape(cshape), cperm)
+    assert got.size == want.size
+    np.testing.assert_array_equal(got.reshape(want.shape), want)
+
+
+@given(shapes_and_perms)
+def test_canonicalize_mode_is_consistent(sp):
+    shape, perm = sp
+    canon = layout.canonicalize(shape, perm)
+    assert canon.mode in ("identity", "copy", "transpose")
+    if canon.mode == "transpose":
+        # output-fastest axis differs from input-fastest axis
+        assert canon.perm[-1] != len(canon.shape) - 1
+    if canon.mode == "copy":
+        assert canon.perm[-1] == len(canon.shape) - 1
+
+
+@given(shapes_and_perms)
+def test_permute_inverse_is_identity(sp):
+    shape, perm = sp
+    x = jnp.asarray(np.random.default_rng(0).standard_normal(shape), jnp.float32)
+    y = ops.permute(x, perm)
+    back = ops.permute(y, layout.invert_perm(perm))
+    np.testing.assert_array_equal(np.asarray(back), np.asarray(x))
+
+
+@given(st.integers(2, 9), st.integers(1, 8))
+def test_interlace_deinterlace_roundtrip(n, blocks):
+    length = 128 * blocks
+    rng = np.random.default_rng(n)
+    arrays = [jnp.asarray(rng.standard_normal(length), jnp.float32) for _ in range(n)]
+    il = ops.interlace(arrays)
+    back = ops.deinterlace(il, n)
+    for a, b in zip(arrays, back):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+    # interlace element law: out[j*n + k] == arrays[k][j]
+    j, k = int(rng.integers(0, length)), int(rng.integers(0, n))
+    assert float(il[j * n + k]) == float(arrays[k][j])
+
+
+@given(st.integers(1, 4))
+def test_stencil_linearity(order):
+    rng = np.random.default_rng(order)
+    x = jnp.asarray(rng.standard_normal((32, 128)), jnp.float32)
+    y = jnp.asarray(rng.standard_normal((32, 128)), jnp.float32)
+    offs, wts = ref.fd_stencil_offsets(order)
+    lhs = ref.stencil2d(x + 2.0 * y, offs, wts)
+    rhs = ref.stencil2d(x, offs, wts) + 2.0 * ref.stencil2d(y, offs, wts)
+    np.testing.assert_allclose(np.asarray(lhs), np.asarray(rhs), rtol=1e-4, atol=1e-4)
+
+
+@given(shapes_and_perms)
+def test_plan_invariants(sp):
+    shape, perm = sp
+    plan = plan_rearrange(shape, jnp.float32, perm)
+    n = int(np.prod(shape))
+    assert plan.bytes_moved == 2 * n * 4
+    assert plan.roofline_s >= 0
+    assert plan.block_r >= 1 and plan.block_c >= 1
+
+
+@given(st.permutations(list(range(4))))
+def test_kernel_matches_oracle_property(perm):
+    rng = np.random.default_rng(1)
+    x = jnp.asarray(rng.standard_normal((3, 4, 5, 16)), jnp.float32)
+    from repro.kernels import reorder_nd
+
+    got = reorder_nd.permute_nd(x, tuple(perm), interpret=True)
+    np.testing.assert_array_equal(
+        np.asarray(got), np.transpose(np.asarray(x), perm)
+    )

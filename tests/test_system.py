@@ -1,0 +1,82 @@
+"""End-to-end behaviour tests: train loop improves loss, checkpoints
+resume bit-exactly into the stream, and the serving engine completes
+batched requests with continuous batching."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro import configs
+from repro.data.pipeline import DataConfig, SyntheticSource
+from repro.models import transformer as tf
+from repro.optim import adamw
+from repro.serve.engine import Engine, Request
+from repro.train.checkpoint import Checkpointer
+from repro.train.trainer import make_train_step
+
+
+def _setup(arch="xlstm-125m-smoke", batch=4, seq=32):
+    cfg = configs.get_config(arch)
+    params = tf.init_params(jax.random.PRNGKey(0), cfg)
+    oc = adamw.OptConfig(lr=3e-3, warmup_steps=2, total_steps=50)
+    opt = adamw.init(params)
+    step = jax.jit(make_train_step(cfg, oc, None))
+    dc = DataConfig(batch=batch, seq=seq, vocab=cfg.vocab, seed=0)
+    return cfg, params, opt, step, SyntheticSource(dc)
+
+
+def test_training_reduces_loss_on_learnable_data():
+    """Constant-token data: loss must fall fast if the whole stack
+    (model, grads, optimizer) is wired correctly."""
+    cfg = configs.get_config("xlstm-125m-smoke")
+    params = tf.init_params(jax.random.PRNGKey(0), cfg)
+    oc = adamw.OptConfig(lr=5e-3, warmup_steps=2, total_steps=30, weight_decay=0.0)
+    opt = adamw.init(params)
+    step = jax.jit(make_train_step(cfg, oc, None))
+    toks = jnp.full((4, 32), 7, jnp.int32)
+    batch = {"tokens": toks, "labels": toks}
+    first = None
+    for i in range(12):
+        params, opt, m = step(params, opt, batch)
+        if first is None:
+            first = float(m["loss"])
+    assert float(m["loss"]) < first * 0.5, (first, float(m["loss"]))
+
+
+def test_checkpoint_restart_is_bit_exact(tmp_path):
+    cfg, params, opt, step, src = _setup()
+    ck = Checkpointer(tmp_path, async_save=False)
+    state = (params, opt)
+    for i in range(4):
+        batch = {k: jnp.asarray(v) for k, v in src.batch_at(i).items()}
+        state = step(*state, batch)[:2]
+        if i == 1:
+            ck.save(2, {"params": state[0], "opt": state[1]})
+    final_direct = state
+
+    skel = jax.tree.map(np.asarray, {"params": final_direct[0], "opt": final_direct[1]})
+    restored = ck.restore(2, skel)
+    state2 = (
+        jax.tree.map(jnp.asarray, restored["params"]),
+        jax.tree.map(jnp.asarray, restored["opt"]),
+    )
+    for i in range(2, 4):
+        batch = {k: jnp.asarray(v) for k, v in src.batch_at(i).items()}
+        state2 = step(*state2, batch)[:2]
+    for a, b in zip(jax.tree.leaves(final_direct[0]), jax.tree.leaves(state2[0])):
+        np.testing.assert_array_equal(np.asarray(a, np.float32), np.asarray(b, np.float32))
+
+
+def test_serving_engine_continuous_batching():
+    cfg = configs.get_config("xlstm-125m-smoke")
+    params = tf.init_params(jax.random.PRNGKey(0), cfg)
+    engine = Engine(cfg, params, batch_slots=2, s_max=128, prompt_bucket=32)
+    rng = np.random.default_rng(0)
+    reqs = [
+        Request(rid=i, prompt=rng.integers(0, cfg.vocab, 20).astype(np.int32), max_new=4)
+        for i in range(5)  # more requests than slots -> slot reuse
+    ]
+    done = engine.run(reqs)
+    assert len(done) == 5
+    assert all(len(r.out) >= 4 for r in done)
+    assert all(0 <= t < cfg.vocab for r in done for t in r.out)
