@@ -1,0 +1,35 @@
+# One-command verify recipes (CI + local).
+#
+#   make test            tier-1 suite (the ROADMAP verify command)
+#   make test-interpret  kernel/engine suites with every op forced through
+#                        the Pallas interpreter (REPRO_PALLAS_INTERPRET=1)
+#   make bench           benchmark harness; writes BENCH_rearrange.json
+#   make lint            byte-compile + import sanity (no external linters
+#                        are installed in the container)
+#
+# `test` deliberately does NOT set REPRO_PALLAS_INTERPRET globally: model
+# smoke tests validate the default dispatch (jnp oracle on CPU), and the
+# kernel suites opt into interpret mode per-test via the pallas_interpret
+# fixture.  `test-interpret` covers the force-everything configuration on
+# the suites designed for it.
+
+PYTHONPATH := src
+
+.PHONY: test test-interpret bench lint check
+
+test:
+	PYTHONPATH=$(PYTHONPATH) python -m pytest -x -q
+
+test-interpret:
+	PYTHONPATH=$(PYTHONPATH) REPRO_PALLAS_INTERPRET=1 python -m pytest -x -q \
+		tests/test_kernels.py tests/test_plan_engine.py tests/test_substrate.py \
+		tests/test_properties.py
+
+bench:
+	PYTHONPATH=$(PYTHONPATH) python -m benchmarks.run
+
+lint:
+	python -m compileall -q src tests benchmarks examples
+	PYTHONPATH=$(PYTHONPATH) python -c "import repro.core.rearrange, repro.core.plan, repro.kernels.ops, benchmarks.run"
+
+check: lint test

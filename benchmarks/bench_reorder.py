@@ -8,7 +8,13 @@ import numpy as np
 
 from benchmarks.common import row, time_fn
 from repro.core import layout
+from repro.core.plan import plan_rearrange
 from repro.kernels import ops
+
+
+def rr_plan(shape, perm):
+    return plan_rearrange(shape, jnp.float32, perm)
+
 
 # (paper order vector, shape) — Table 2 rows
 ROWS = [
@@ -28,12 +34,16 @@ def run() -> list[str]:
         fn = jax.jit(lambda a, p=perm: ops.permute(a, p))
         t = time_fn(fn, x)
         canon = layout.canonicalize(shape, perm)
+        plan = rr_plan(shape, perm)
         out.append(
             row(
                 f"reorder_{'-'.join(map(str, order))}",
                 t,
                 2 * x.size * 4,
-                f"[{canon.mode}, coalesced {len(canon.shape)}D]",
+                f"[{plan.mode}, coalesced {len(canon.shape)}D]",
+                plan_mode=plan.mode,
+                kernel=plan.kernel,
+                measured="pallas" if ops.use_pallas() else "xla_oracle",
             )
         )
     return out

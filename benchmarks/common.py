@@ -47,7 +47,22 @@ def memcpy_gbps(nbytes: int = 1 << 28) -> float:
     return _MEMCPY_CACHE[nbytes]
 
 
-def row(name: str, seconds: float, bytes_moved: int, note: str = "") -> str:
+# machine-readable record stream: every row() call also appends a dict here;
+# benchmarks.run dumps the accumulated records to BENCH_rearrange.json so the
+# perf trajectory is tracked across PRs.
+RECORDS: list[dict] = []
+
+
+def row(name: str, seconds: float, bytes_moved: int, note: str = "", **fields) -> str:
     gbps = bytes_moved / seconds / 1e9
     frac = gbps / memcpy_gbps()
+    RECORDS.append(
+        {
+            "op": name,
+            "us_per_call": round(seconds * 1e6, 1),
+            "gbps": round(gbps, 3),
+            "frac_memcpy": round(frac, 4),
+            **fields,
+        }
+    )
     return f"{name},{seconds*1e6:.1f},{gbps:.2f} GB/s ({frac*100:.0f}% of memcpy){(' ' + note) if note else ''}"

@@ -3,14 +3,20 @@
   PYTHONPATH=src python -m benchmarks.run [--only copy,permute,...]
 
 Prints ``name,us_per_call,derived`` CSV per row (derived = achieved GB/s
-and fraction of host memcpy — the paper's normalization).
+and fraction of host memcpy — the paper's normalization), and writes the
+machine-readable record stream to ``BENCH_rearrange.json`` (op name,
+achieved GB/s, fraction of memcpy, plan mode) so the perf trajectory is
+tracked across PRs.
 """
 
 from __future__ import annotations
 
 import argparse
+import json
 import sys
 import time
+
+from benchmarks import common
 
 SUITES = [
     ("copy", "benchmarks.bench_copy", "Fig. 1 read/write kernels"),
@@ -26,15 +32,20 @@ SUITES = [
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--only", default="")
+    ap.add_argument(
+        "--json", default="BENCH_rearrange.json", help="machine-readable output path"
+    )
     args = ap.parse_args()
     only = set(args.only.split(",")) if args.only else None
 
+    common.RECORDS.clear()
     print("name,us_per_call,derived")
     for key, module, title in SUITES:
         if only and key not in only:
             continue
         t0 = time.time()
         print(f"# === {title} ({module}) ===", flush=True)
+        n_before = len(common.RECORDS)
         try:
             mod = __import__(module, fromlist=["run"])
             for line in mod.run():
@@ -42,7 +53,19 @@ def main() -> None:
         except Exception as e:  # noqa: BLE001 — keep the harness running
             print(f"# {key} FAILED: {type(e).__name__}: {e}", file=sys.stderr)
             print(f"{key},error,{type(e).__name__}")
+        for rec in common.RECORDS[n_before:]:
+            rec.setdefault("suite", key)
         print(f"# ({time.time()-t0:.1f}s)", flush=True)
+
+    if args.json:
+        with open(args.json, "w") as f:
+            json.dump(
+                {"memcpy_gbps": round(common.memcpy_gbps(), 2), "rows": common.RECORDS},
+                f,
+                indent=2,
+            )
+            f.write("\n")
+        print(f"# wrote {args.json} ({len(common.RECORDS)} rows)", flush=True)
 
 
 if __name__ == "__main__":

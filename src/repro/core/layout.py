@@ -96,6 +96,35 @@ def coalesce(
     return new_shape, tuple(new_perm), groups
 
 
+def swap_factors(
+    shape: Sequence[int], perm: Sequence[int]
+) -> tuple[int, int, int, int] | None:
+    """Factor a (coalesced) permutation as a batched 2-D transpose.
+
+    A permutation is in the *batched-transpose family* iff it is a single
+    adjacent-pair swap: ``(0..b-1, b+1, b, b+2..n-1)``.  Every such reorder
+    is exactly ``(B, R, C, V) -> (B, C, R, V)`` movement, where B collapses
+    the identity prefix, V collapses the identity suffix (the contiguous
+    vector payload each (r, c) element carries), and (R, C) is the movement
+    plane — the paper's batched 2-D transpose with both sides coalesced.
+
+    Returns ``(B, R, C, V)`` sizes, or None when the perm is not a single
+    adjacent swap.  After :func:`coalesce` the prefix and suffix are each at
+    most one axis, so the canonical family is exactly
+    ``{(1,0), (0,2,1), (1,0,2), (0,2,1,3)}``.
+    """
+    n = len(perm)
+    moved = [i for i in range(n) if perm[i] != i]
+    if len(moved) != 2:
+        return None
+    i, j = moved
+    if j != i + 1 or perm[i] != j or perm[j] != i:
+        return None
+    batch = math.prod(shape[:i]) if i else 1
+    vec = math.prod(shape[j + 1 :]) if j + 1 < n else 1
+    return batch, shape[i], shape[j], vec
+
+
 @dataclass(frozen=True)
 class Canonical:
     """A reorder reduced to its movement plane (paper §III-B).

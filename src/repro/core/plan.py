@@ -1,20 +1,39 @@
-"""Rearrangement planner: canonicalize, cost-model, choose kernel + tiles.
+"""Rearrangement planner: collapse -> route -> cache (DESIGN.md §3).
 
 The planner is the library's 'auto gridding' (paper §III-A: "gridding and
-threading configuration is done automatically based on the data size").
-It reports the predicted HBM traffic and roofline time so callers (and the
-benchmarks) can compare achieved vs predicted movement.
+threading configuration is done automatically based on the data size") and
+the single dispatch spine for every permute-shaped op:
+
+1. **collapse** — merge contiguous input axes that stay adjacent under the
+   permutation (:func:`repro.core.layout.coalesce`), so every reorder
+   reduces to its minimal-rank canonical form;
+2. **route** — pick the cheapest kernel for the canonical form:
+   ``identity`` (pure reshape, no data movement), ``transpose`` (the
+   adjacent-swap family -> batched 2-D transpose, `kernels/permute3d.py`),
+   ``copy`` (fastest axis preserved -> blocked row gather), or ``reorder``
+   (generic fallback, `kernels/reorder_nd.py`);
+3. **cache** — plans are memoized on ``(shape, dtype, perm, grid_order)``
+   so steady-state training/serving steps pay zero planning overhead
+   (repeated calls return the *identical* plan object).
+
+It also reports the predicted HBM traffic and roofline time so callers
+(and the benchmarks) can compare achieved vs predicted movement.
 """
 
 from __future__ import annotations
 
+import functools
 from dataclasses import dataclass
 from typing import Sequence
 
 import jax.numpy as jnp
 
 from repro.core import layout
-from repro.kernels.tiling import plan_copy_tiles, plan_transpose_tiles
+from repro.kernels.tiling import (
+    plan_copy_tiles,
+    plan_transpose_tiles,
+    plan_transpose_vec_tiles,
+)
 
 # v5e per-chip hardware constants (also used by utils.roofline)
 HBM_GBPS = 819.0
@@ -24,49 +43,130 @@ ICI_GBPS_PER_LINK = 50.0
 
 @dataclass(frozen=True)
 class RearrangePlan:
-    mode: str  # identity | copy | transpose
+    mode: str  # identity | copy | transpose | reorder
+    kernel: str  # noop | copy | transpose2d_batched[_vec] | reorder_nd
     canonical_shape: tuple[int, ...]
     canonical_perm: tuple[int, ...]
+    out_shape: tuple[int, ...]  # full-rank output shape
+    exec_shape: tuple[int, ...] | None  # (B, R, C, V) for transpose mode
     block_r: int
     block_c: int
+    grid_order: str
     bytes_moved: int  # read + write
     roofline_s: float  # bytes / HBM bandwidth (one chip)
 
     def describe(self) -> str:
         return (
             f"{self.mode}: shape={self.canonical_shape} perm={self.canonical_perm} "
-            f"tiles=({self.block_r},{self.block_c}) "
+            f"kernel={self.kernel} tiles=({self.block_r},{self.block_c}) "
             f"{self.bytes_moved/1e6:.2f} MB moved, "
             f"roofline {self.roofline_s*1e6:.1f} us @ {HBM_GBPS} GB/s"
         )
 
 
-def plan_rearrange(shape: Sequence[int], dtype, perm: Sequence[int]) -> RearrangePlan:
+@functools.lru_cache(maxsize=4096)
+def _plan_cached(
+    shape: tuple[int, ...], dtype_name: str, perm: tuple[int, ...], grid_order: str
+) -> RearrangePlan:
     canon = layout.canonicalize(shape, perm)
-    itemsize = jnp.dtype(dtype).itemsize
+    itemsize = jnp.dtype(dtype_name).itemsize
     n_elems = 1
     for s in shape:
         n_elems *= int(s)
+    out_shape = tuple(shape[p] for p in perm)
     bytes_moved = 2 * n_elems * itemsize  # read once + write once
 
+    exec_shape = None
+    factors = None if canon.mode == "identity" else layout.swap_factors(
+        canon.shape, canon.perm
+    )
+    if n_elems == 0:
+        # zero-size array: nothing to move, the output is an empty reshape
+        return RearrangePlan(
+            mode="identity",
+            kernel="noop",
+            canonical_shape=canon.shape,
+            canonical_perm=canon.perm,
+            out_shape=out_shape,
+            exec_shape=None,
+            block_r=1,
+            block_c=1,
+            grid_order=grid_order,
+            bytes_moved=0,
+            roofline_s=0.0,
+        )
     if canon.mode == "identity" or canon.rows_axis is None:
-        tp = plan_copy_tiles(
-            max(n_elems // max(shape[-1], 1), 1), shape[-1] if shape else 1, dtype
-        )
+        # no movement: the output is a metadata reshape of the input (a
+        # caller that must materialize routes through the streaming copy
+        # kernel, copy.py, with these tiles)
+        mode, kernel = "identity", "noop"
+        last = shape[-1] if shape else 1
+        tp = plan_copy_tiles(max(n_elems // max(last, 1), 1), last, dtype_name)
+        br, bc = tp.block_r, tp.block_c
+    elif factors is not None:
+        # adjacent-swap family: batched 2-D transpose plane, V-deep elements
+        mode = "transpose"
+        b, r, c, v = factors
+        exec_shape = (b, r, c, v)
+        if v > 1:
+            kernel = "transpose2d_batched_vec"
+            vp = plan_transpose_vec_tiles(r, c, v, dtype_name)
+            br, bc = vp.block_r, vp.block_c
+        else:
+            kernel = "transpose2d_batched"
+            tp = plan_transpose_tiles(r, c, dtype_name)
+            br, bc = tp.block_r, tp.block_c
     elif canon.mode == "copy":
+        # fastest axis preserved: blocked gather of contiguous rows
+        mode, kernel = "copy", "reorder_nd"
         tp = plan_copy_tiles(
-            canon.shape[canon.rows_axis], canon.shape[canon.cols_axis], dtype
+            canon.shape[canon.rows_axis], canon.shape[canon.cols_axis], dtype_name
         )
+        br, bc = tp.block_r, tp.block_c
     else:
+        # generic fallback: both fastest axes change, not a single swap
+        mode, kernel = "reorder", "reorder_nd"
         tp = plan_transpose_tiles(
-            canon.shape[canon.rows_axis], canon.shape[canon.cols_axis], dtype
+            canon.shape[canon.rows_axis], canon.shape[canon.cols_axis], dtype_name
         )
+        br, bc = tp.block_r, tp.block_c
+
     return RearrangePlan(
-        mode=canon.mode,
+        mode=mode,
+        kernel=kernel,
         canonical_shape=canon.shape,
         canonical_perm=canon.perm,
-        block_r=tp.block_r,
-        block_c=tp.block_c,
+        out_shape=out_shape,
+        exec_shape=exec_shape,
+        block_r=br,
+        block_c=bc,
+        grid_order=grid_order,
         bytes_moved=bytes_moved,
         roofline_s=bytes_moved / (HBM_GBPS * 1e9),
     )
+
+
+def plan_rearrange(
+    shape: Sequence[int],
+    dtype,
+    perm: Sequence[int],
+    *,
+    grid_order: str = "out",
+) -> RearrangePlan:
+    """Plan (and cache) the movement for ``transpose(x, perm)``."""
+    perm_t = tuple(int(p) for p in perm)
+    if sorted(perm_t) != list(range(len(shape))):
+        raise ValueError(f"bad perm {perm_t} for rank {len(shape)}")
+    if grid_order not in ("in", "out"):
+        raise ValueError(f"grid_order must be 'in' or 'out', got {grid_order!r}")
+    return _plan_cached(
+        tuple(int(s) for s in shape),
+        jnp.dtype(dtype).name,
+        perm_t,
+        grid_order,
+    )
+
+
+def plan_cache_info():
+    """Expose the memo stats (tests / benchmarks)."""
+    return _plan_cached.cache_info()

@@ -2,11 +2,16 @@
 
 Every entry point accepts either numpy-convention permutations or the
 paper's fastest-first ``order`` vectors, and dispatches through
-``repro.kernels.ops`` (Pallas on TPU, fused-XLA oracle elsewhere).
+``repro.kernels.ops`` (Pallas on TPU, fused-XLA oracle elsewhere).  Each
+permute-shaped call routes through the plan engine (`core/plan.py`):
+collapse adjacent axes -> route to the cheapest kernel -> cached plan.
 
 Model-facing fused helpers (`split_qkv`, `split_heads`, `space_to_depth`,
 `rope_halves`, ...) make the kernels first-class citizens of the training
-framework — see DESIGN.md §4 for the mapping.
+framework — see DESIGN.md §4 for the mapping.  The reshape halves of each
+helper fold into the plan's canonical shape (metadata-only merges of a
+contiguous array), so every helper lowers to a SINGLE kernel invocation —
+never a materialized reshape intermediate.
 """
 
 from __future__ import annotations
@@ -69,21 +74,14 @@ def transpose(x: Array) -> Array:
 
 def interlace(arrays: Sequence[Array]) -> Array:
     """n same-shape arrays -> one array with the last axis interleaved:
-    out[..., j*n + k] = arrays[k][..., j]."""
-    arrays = list(arrays)
-    if arrays[0].ndim == 1:
-        return ops.interlace(arrays)
-    flat = [a.reshape(-1) for a in arrays]
-    out = ops.interlace(flat)
-    lead = arrays[0].shape[:-1]
-    return out.reshape(*lead, arrays[0].shape[-1] * len(arrays))
+    out[..., j*n + k] = arrays[k][..., j].  N-D flattening happens inside
+    the op (metadata-only), so this is a single kernel pass."""
+    return ops.interlace(list(arrays))
 
 
 def deinterlace(x: Array, n: int) -> list[Array]:
-    """Inverse of :func:`interlace` along the last axis."""
-    lead, last = x.shape[:-1], x.shape[-1]
-    outs = ops.deinterlace(x.reshape(-1), n)
-    return [o.reshape(*lead, last // n) for o in outs]
+    """Inverse of :func:`interlace` along the last axis (single kernel)."""
+    return ops.deinterlace(x, n)
 
 
 # ---------------------------------------------------------------------------
@@ -106,14 +104,19 @@ def split_qkv(
 
 
 def split_heads(x: Array, n_heads: int) -> Array:
-    """(B, S, H*D) -> (B, H, S, D): the attention head permute."""
+    """(B, S, H*D) -> (B, H, S, D): the attention head permute.
+
+    The leading reshape is metadata-only; the (0, 2, 1, 3) permute is the
+    adjacent-swap family, so the planner routes it to ONE batched 2-D
+    transpose kernel with D-deep vector elements (plan mode 'transpose')."""
     b, s, hd = x.shape
     d = hd // n_heads
     return ops.permute(x.reshape(b, s, n_heads, d), (0, 2, 1, 3))
 
 
 def merge_heads(x: Array) -> Array:
-    """(B, H, S, D) -> (B, S, H*D)."""
+    """(B, H, S, D) -> (B, S, H*D): inverse of :func:`split_heads`, the same
+    single batched-transpose kernel with the trailing reshape folded away."""
     b, h, s, d = x.shape
     return ops.permute(x, (0, 2, 1, 3)).reshape(b, s, h * d)
 
@@ -128,7 +131,11 @@ def rope_halves(x: Array) -> tuple[Array, Array]:
 
 def space_to_depth(img: Array, patch: int) -> Array:
     """(B, H, W, C) -> (B, H/p, W/p, p*p*C): the ViT patchify reorder —
-    an N->M reorder in the paper's taxonomy (§III-B)."""
+    an N->M reorder in the paper's taxonomy (§III-B).
+
+    The rank-6 permute collapses to canonical (B*H/p, p, W/p, p*C) with
+    perm (0, 2, 1, 3) — again the swap family, so the whole patchify is a
+    single batched-transpose kernel despite the two framing reshapes."""
     b, h, w, c = img.shape
     x = img.reshape(b, h // patch, patch, w // patch, patch, c)
     x = ops.permute(x, (0, 1, 3, 2, 4, 5))
@@ -142,6 +149,6 @@ def kv_cache_to_decode_layout(k: Array) -> Array:
     return ops.permute(k, (0, 2, 1, 3))
 
 
-def plan(x: Array, perm: Sequence[int]):
-    """Expose the planner for inspection/benchmarks."""
-    return plan_rearrange(x.shape, x.dtype, tuple(perm))
+def plan(x: Array, perm: Sequence[int], *, grid_order: str = "out"):
+    """Expose the (cached) planner for inspection/benchmarks."""
+    return plan_rearrange(x.shape, x.dtype, tuple(perm), grid_order=grid_order)

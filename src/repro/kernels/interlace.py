@@ -29,11 +29,20 @@ from repro.kernels.tiling import LANES, VMEM_BUDGET, force_interpret
 
 
 def _pick_bc(L: int, n: int, itemsize: int) -> int:
-    """Largest lane-multiple column block dividing L within VMEM budget."""
+    """Largest power-of-two column block dividing L within VMEM budget.
+
+    Prefers lane multiples (>= 128); lengths with only a small power-of-two
+    factor still get a (narrower, slower) kernel block, and lengths with no
+    usable factor raise so dispatch falls back to the oracle.
+    """
+    if L == 0:
+        raise ValueError("empty arrays: no kernel block (oracle handles L=0)")
     budget_elems = VMEM_BUDGET // (2 * itemsize * max(n, 1))
-    bc = LANES
-    while bc * 2 <= budget_elems and L % (bc * 2) == 0 and bc * 2 <= 16384:
+    bc = 1
+    while bc * 2 <= min(budget_elems, 16384) and L % (bc * 2) == 0:
         bc *= 2
+    if bc < 8:
+        raise ValueError(f"L={L} has no usable power-of-two block (got {bc})")
     return bc
 
 

@@ -23,7 +23,9 @@ from typing import Callable, Sequence
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
+from repro.core.plan import RearrangePlan, plan_rearrange
 from repro.kernels import (
     copy as copy_k,
     gather_scatter as gs_k,
@@ -95,10 +97,54 @@ def transpose2d_batched(x: Array, *, diagonal: bool = False) -> Array:
     return ref.transpose2d_batched(x)
 
 
+def apply_plan(x: Array, plan: RearrangePlan) -> Array:
+    """Execute a :class:`RearrangePlan` on ``x`` with the Pallas kernels.
+
+    Reshapes to/from the canonical form are metadata-only (adjacent-axis
+    merges of a contiguous array), so every route is at most ONE kernel
+    invocation over HBM:
+
+      identity  -> pure reshape, zero data movement
+      transpose -> batched 2-D transpose (scalar or V-deep elements)
+      copy      -> reorder_nd in row-gather mode on the collapsed form
+      reorder   -> generic reorder_nd on the collapsed form
+    """
+    interp = _interpret()
+    if plan.mode == "identity":
+        return x.reshape(plan.out_shape)
+    if plan.mode == "transpose":
+        b, r, c, v = plan.exec_shape
+        if v > 1:
+            y = p3_k.transpose2d_batched_vec(
+                x.reshape(b, r, c, v),
+                block_r=plan.block_r,
+                block_c=plan.block_c,
+                interpret=interp,
+            )
+        else:
+            y = p3_k.transpose2d_batched(
+                x.reshape(b, r, c),
+                block_r=plan.block_r,
+                block_c=plan.block_c,
+                interpret=interp,
+            )
+        return y.reshape(plan.out_shape)
+    y = rnd_k.permute_nd(
+        x.reshape(plan.canonical_shape),
+        plan.canonical_perm,
+        block_r=plan.block_r,
+        block_c=plan.block_c,
+        grid_order=plan.grid_order,
+        interpret=interp,
+    )
+    return y.reshape(plan.out_shape)
+
+
 def permute(x: Array, perm: Sequence[int], *, grid_order: str = "out") -> Array:
     perm = tuple(int(p) for p in perm)
     if use_pallas():
-        return rnd_k.permute_nd(x, perm, grid_order=grid_order, interpret=_interpret())
+        plan = plan_rearrange(x.shape, x.dtype, perm, grid_order=grid_order)
+        return apply_plan(x, plan)
     return ref.permute(x, perm)
 
 
@@ -111,33 +157,73 @@ def reorder_nm(
     """N->M reorder: window select + permute + squeeze (paper §III-B)."""
     if base is None and sizes is None and len(perm) == x.ndim:
         return permute(x, perm)
-    # windowed form: slice via oracle (cheap, contiguousable), permute via kernel
     nd = x.ndim
     base_l = [0] * nd if base is None else list(base)
     sizes_l = list(x.shape) if sizes is None else list(sizes)
-    window = jax.lax.dynamic_slice(x, base_l, sizes_l)
     kept = [int(p) for p in perm]
-    full_perm = kept + [ax for ax in range(nd) if ax not in set(kept)]
+    kept_set = set(kept)
+    for ax in range(nd):
+        if ax not in kept_set and sizes_l[ax] != 1:
+            raise ValueError(
+                f"axis {ax} dropped by perm {perm} must have window size 1, "
+                f"got {sizes_l[ax]}"
+            )
+    full_perm = kept + [ax for ax in range(nd) if ax not in kept_set]
+    out_shape = tuple(sizes_l[ax] for ax in kept)
+    static_base = all(isinstance(b, (int, np.integer)) for b in base_l)
+    if use_pallas() and static_base:
+        # fused one-pass form: the window base rides in the kernel's
+        # index_map offsets, no materialized slice (DESIGN.md §6).  The base
+        # is clamped like dynamic_slice so both paths agree on semantics.
+        base_c = tuple(
+            min(max(int(b), 0), x.shape[k] - int(sizes_l[k]))
+            for k, b in enumerate(base_l)
+        )
+        try:
+            moved = rnd_k.reorder_window(
+                x,
+                tuple(full_perm),
+                base_c,
+                tuple(int(s) for s in sizes_l),
+                interpret=_interpret(),
+            )
+        except ValueError:
+            pass  # base too misaligned for fused blocks: two-pass fallback
+        else:
+            return moved.reshape(out_shape)
+    # runtime (traced) or misaligned base: slice, then permute via kernel
+    window = jax.lax.dynamic_slice(x, base_l, sizes_l)
     moved = permute(window, full_perm) if use_pallas() else ref.permute(window, full_perm)
-    return moved.reshape(tuple(sizes_l[ax] for ax in kept))
+    return moved.reshape(out_shape)
 
 
 def interlace(arrays: Sequence[Array]) -> Array:
+    """Interleave n same-shape arrays along the last axis.  N-D inputs are
+    flattened (a metadata reshape) so the whole op is one kernel pass."""
     arrays = list(arrays)
-    if use_pallas() and all(a.ndim == 1 for a in arrays):
+    same = arrays and arrays[0].ndim >= 1 and all(
+        a.shape == arrays[0].shape and a.dtype == arrays[0].dtype for a in arrays
+    )
+    if use_pallas() and same:
+        lead, last = arrays[0].shape[:-1], arrays[0].shape[-1]
+        flat = tuple(a.reshape(-1) for a in arrays)
         try:
-            return il_k.interlace(tuple(arrays), interpret=_interpret())
+            out = il_k.interlace(flat, interpret=_interpret())
         except ValueError:
-            pass
-    return ref.interlace(arrays)
+            return ref.interlace(arrays)
+        return out.reshape(*lead, last * len(arrays))
+    return ref.interlace(arrays)  # mismatched inputs raise in the oracle
 
 
 def deinterlace(x: Array, n: int) -> list[Array]:
-    if use_pallas() and x.ndim == 1:
+    """Inverse of :func:`interlace` along the last axis (N-D supported)."""
+    if use_pallas() and x.ndim >= 1 and x.shape[-1] % n == 0:
+        lead, last = x.shape[:-1], x.shape[-1]
         try:
-            return list(il_k.deinterlace(x, n, interpret=_interpret()))
+            outs = il_k.deinterlace(x.reshape(-1), n, interpret=_interpret())
         except ValueError:
-            pass
+            return ref.deinterlace(x, n)
+        return [o.reshape(*lead, last // n) for o in outs]
     return ref.deinterlace(x, n)
 
 

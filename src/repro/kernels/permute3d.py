@@ -27,7 +27,12 @@ from jax import lax
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
-from repro.kernels.tiling import cdiv, force_interpret, plan_transpose_tiles
+from repro.kernels.tiling import (
+    cdiv,
+    force_interpret,
+    plan_transpose_tiles,
+    plan_transpose_vec_tiles,
+)
 
 
 def _transpose_kernel(x_ref, o_ref):
@@ -88,6 +93,60 @@ def transpose2d_batched(
         in_specs=[pl.BlockSpec((1, br, bc), in_map)],
         out_specs=pl.BlockSpec((1, bc, br), out_map),
         out_shape=jax.ShapeDtypeStruct((B, C, R), x.dtype),
+        interpret=interpret,
+        **kwargs,
+    )(x)
+
+
+def _transpose_vec_kernel(x_ref, o_ref):
+    # block shapes: x (1, br, bc, bv) -> o (1, bc, br, bv)
+    o_ref[0] = jnp.transpose(x_ref[0], (1, 0, 2))
+
+
+@functools.partial(
+    jax.jit, static_argnames=("block_r", "block_c", "block_v", "interpret")
+)
+def transpose2d_batched_vec(
+    x: jax.Array,
+    *,
+    block_r: int | None = None,
+    block_c: int | None = None,
+    block_v: int | None = None,
+    interpret: bool | None = None,
+) -> jax.Array:
+    """(B, R, C, V) -> (B, C, R, V): batched middle-axes transpose with a
+    contiguous vector payload.
+
+    This is the planner's target for the whole (B, S, H, D)-swap family
+    (split_heads / merge_heads / space_to_depth after axis collapsing): V is
+    the collapsed identity tail, so both the load and the store move runs of
+    V contiguous elements — the (R, C) plane transposes whole V-vectors
+    instead of scalars, and the lane dim never changes sides.
+    """
+    if x.ndim != 4:
+        raise ValueError(f"expected (B, R, C, V), got {x.shape}")
+    B, R, C, V = x.shape
+    plan = plan_transpose_vec_tiles(R, C, V, x.dtype)
+    br = min(block_r or plan.block_r, R)
+    bc = min(block_c or plan.block_c, C)
+    bv = min(block_v or plan.block_v, V)
+    nR, nC, nV = cdiv(R, br), cdiv(C, bc), cdiv(V, bv)
+
+    def in_map(b, i, j, v):
+        return (b, i, j, v)
+
+    def out_map(b, i, j, v):
+        return (b, j, i, v)
+
+    interpret = force_interpret() if interpret is None else interpret
+    params = _dim_semantics(4, parallel=True)
+    kwargs = {"compiler_params": params} if params is not None else {}
+    return pl.pallas_call(
+        _transpose_vec_kernel,
+        grid=(B, nR, nC, nV),
+        in_specs=[pl.BlockSpec((1, br, bc, bv), in_map)],
+        out_specs=pl.BlockSpec((1, bc, br, bv), out_map),
+        out_shape=jax.ShapeDtypeStruct((B, C, R, V), x.dtype),
         interpret=interpret,
         **kwargs,
     )(x)

@@ -20,6 +20,10 @@ fastest-changing output dim* — is kept intact.  What changes on TPU:
   degenerates to a blocked gather of contiguous rows — the paper's N-to-M
   case with preserved dim-0.
 
+``permute_nd`` is the full-array form; ``reorder_window`` is the windowed
+N->M form (paper §III-B), sharing the same grid builder with the (static)
+window base folded into the input index map (DESIGN.md §6).
+
 ``perm`` uses numpy convention: ``out axis j  <-  in axis perm[j]``.
 """
 
@@ -39,6 +43,7 @@ from repro.kernels.tiling import (
     force_interpret,
     plan_copy_tiles,
     plan_transpose_tiles,
+    sublanes,
 )
 
 
@@ -51,6 +56,119 @@ def _dim_semantics(n: int):
         return pltpu.CompilerParams(dimension_semantics=(pltpu.ARBITRARY,) * n)
     except Exception:  # pragma: no cover
         return None
+
+
+def _movement_axes(perm: tuple[int, ...]) -> tuple[int | None, int, bool]:
+    """The two blocked axes of the movement plane: (r_in, c_in, transpose?).
+
+    r_in is None at rank 1 (no second axis to block — a pure lane copy)."""
+    N = len(perm)
+    c_in = N - 1
+    transpose_mode = perm[-1] != c_in
+    if N < 2:
+        return None, c_in, False
+    r_in = perm[-1] if transpose_mode else perm[-2]
+    return r_in, c_in, transpose_mode
+
+
+def _align_block(block: int, offset: int) -> int:
+    """Largest block <= ``block`` (by halving) that divides ``offset``, so a
+    window base can ride in the index map as a whole number of blocks."""
+    while offset % block:
+        block = max(1, block // 2)
+    return block
+
+
+def _reorder_call(
+    x: jax.Array,
+    perm: tuple[int, ...],
+    base: tuple[int, ...],
+    sizes: tuple[int, ...],
+    br: int,
+    bc: int,
+    r_in: int | None,
+    c_in: int,
+    grid_order: str,
+    interpret: bool,
+) -> jax.Array:
+    """Shared grid builder: ``transpose(x[base : base+sizes], perm)`` as one
+    pallas_call.  Batch axes use unit blocks (any base offset is exact); the
+    two blocked plane axes must have block-aligned bases (see callers)."""
+    N = x.ndim
+    W = sizes
+    out_shape = tuple(W[p] for p in perm)
+
+    blocks = [1] * N
+    blocks[c_in] = bc
+    if r_in is not None:
+        blocks[r_in] = br
+    nblocks = [cdiv(W[k], blocks[k]) for k in range(N)]
+    offs = [base[k] // blocks[k] for k in range(N)]  # exact: blocks aligned
+
+    plane = {c_in} if r_in is None else {r_in, c_in}
+    if grid_order == "out":
+        batch_in_axes = [p for p in perm if p not in plane]
+    elif grid_order == "in":
+        batch_in_axes = [k for k in range(N) if k not in plane]
+    else:
+        raise ValueError(f"grid_order must be 'in' or 'out', got {grid_order!r}")
+    batch_radix = [nblocks[a] for a in batch_in_axes]
+    G = math.prod(batch_radix) if batch_radix else 1
+
+    # mixed-radix weights: coordinate of batch axis a = (g // w[a]) % radix[a]
+    weights: dict[int, int] = {}
+    w = 1
+    for a, r in zip(reversed(batch_in_axes), reversed(batch_radix)):
+        weights[a] = w
+        w *= r
+
+    def win_coords(g, i, j):
+        coords = []
+        for k in range(N):
+            if k == r_in:
+                coords.append(i)
+            elif k == c_in:
+                coords.append(j)
+            else:
+                coords.append(lax.rem(g // weights[k], nblocks[k]))
+        return coords
+
+    def in_map(g, i, j):
+        return tuple(c + offs[k] for k, c in enumerate(win_coords(g, i, j)))
+
+    def out_map(g, i, j):
+        c = win_coords(g, i, j)
+        return tuple(c[p] for p in perm)
+
+    in_block = tuple(blocks)
+    out_block = tuple(blocks[p] for p in perm)
+    grid_r = nblocks[r_in] if r_in is not None else 1
+
+    params = _dim_semantics(3)
+    kwargs = {"compiler_params": params} if params is not None else {}
+    return pl.pallas_call(
+        functools.partial(_permute_kernel, perm),
+        grid=(G, grid_r, nblocks[c_in]),
+        in_specs=[pl.BlockSpec(in_block, in_map)],
+        out_specs=pl.BlockSpec(out_block, out_map),
+        out_shape=jax.ShapeDtypeStruct(out_shape, x.dtype),
+        interpret=interpret,
+        **kwargs,
+    )(x)
+
+
+def _plan_blocks(
+    perm: tuple[int, ...], sizes: tuple[int, ...], dtype
+) -> tuple[int, int, int | None, int, bool]:
+    """Tile the movement plane of ``perm`` over (window) ``sizes``."""
+    r_in, c_in, transpose_mode = _movement_axes(perm)
+    R = sizes[r_in] if r_in is not None else 1
+    C = sizes[c_in]
+    if transpose_mode:
+        plan = plan_transpose_tiles(R, C, dtype)
+    else:
+        plan = plan_copy_tiles(R, C, dtype)
+    return plan.block_r, plan.block_c, r_in, c_in, transpose_mode
 
 
 @functools.partial(
@@ -77,79 +195,73 @@ def permute_nd(
     perm = tuple(int(p) for p in perm)
     if sorted(perm) != list(range(N)):
         raise ValueError(f"bad perm {perm} for rank {N}")
-    out_shape = tuple(x.shape[p] for p in perm)
     if N == 0 or perm == tuple(range(N)):
         # identity: fall through to a plain copy (still a kernel-shaped op)
         return x + jnp.zeros((), x.dtype)
 
-    c_in = N - 1  # input-fastest axis
-    transpose_mode = perm[-1] != c_in
-    if transpose_mode:
-        r_in = perm[-1]  # axis that becomes output-fastest
-    else:
-        # fastest axis preserved: block the axis that becomes 2nd-fastest out
-        r_in = perm[-2] if N >= 2 else c_in
-
-    R, C = x.shape[r_in], x.shape[c_in]
-    if transpose_mode:
-        plan = plan_transpose_tiles(R, C, x.dtype)
-    else:
-        plan = plan_copy_tiles(R, C, x.dtype)
-    br = min(block_r or plan.block_r, R)
-    bc = min(block_c or plan.block_c, C)
-
-    # per-axis block size and block count
-    blocks = [1] * N
-    blocks[r_in], blocks[c_in] = br, bc
-    nblocks = [cdiv(x.shape[k], blocks[k]) for k in range(N)]
-
-    # batch axes (all but r_in/c_in), walked in in- or out-linear order
-    if grid_order == "out":
-        batch_in_axes = [p for p in perm if p not in (r_in, c_in)]
-    elif grid_order == "in":
-        batch_in_axes = [k for k in range(N) if k not in (r_in, c_in)]
-    else:
-        raise ValueError(f"grid_order must be 'in' or 'out', got {grid_order!r}")
-    batch_radix = [nblocks[a] for a in batch_in_axes]
-    G = math.prod(batch_radix) if batch_radix else 1
-
-    # mixed-radix weights: coordinate of batch axis a = (g // w[a]) % radix[a]
-    weights: dict[int, int] = {}
-    w = 1
-    for a, r in zip(reversed(batch_in_axes), reversed(batch_radix)):
-        weights[a] = w
-        w *= r
-
-    def in_coords(g, i, j):
-        coords = []
-        for k in range(N):
-            if k == r_in:
-                coords.append(i)
-            elif k == c_in:
-                coords.append(j)
-            else:
-                coords.append(lax.rem(g // weights[k], nblocks[k]))
-        return coords
-
-    def in_map(g, i, j):
-        return tuple(in_coords(g, i, j))
-
-    def out_map(g, i, j):
-        c = in_coords(g, i, j)
-        return tuple(c[p] for p in perm)
-
-    in_block = tuple(blocks)
-    out_block = tuple(blocks[p] for p in perm)
-
+    pr, pc, r_in, c_in, _ = _plan_blocks(perm, x.shape, x.dtype)
+    br = min(block_r or pr, x.shape[r_in]) if r_in is not None else 1
+    bc = min(block_c or pc, x.shape[c_in])
     interpret = force_interpret() if interpret is None else interpret
-    params = _dim_semantics(3)
-    kwargs = {"compiler_params": params} if params is not None else {}
-    return pl.pallas_call(
-        functools.partial(_permute_kernel, perm),
-        grid=(G, nblocks[r_in], nblocks[c_in]),
-        in_specs=[pl.BlockSpec(in_block, in_map)],
-        out_specs=pl.BlockSpec(out_block, out_map),
-        out_shape=jax.ShapeDtypeStruct(out_shape, x.dtype),
-        interpret=interpret,
-        **kwargs,
-    )(x)
+    return _reorder_call(
+        x, perm, (0,) * N, x.shape, br, bc, r_in, c_in, grid_order, interpret
+    )
+
+
+@functools.partial(
+    jax.jit, static_argnames=("perm", "base", "sizes", "grid_order", "interpret")
+)
+def reorder_window(
+    x: jax.Array,
+    perm: tuple[int, ...],
+    base: tuple[int, ...],
+    sizes: tuple[int, ...],
+    *,
+    grid_order: str = "out",
+    interpret: bool | None = None,
+) -> jax.Array:
+    """Fused windowed N->M reorder (paper §III-B): one pallas_call computing
+    ``transpose(x[base : base + sizes], perm)``.
+
+    The window slice is *not* materialized — the static base offsets are
+    folded into the input BlockSpec ``index_map`` (the TPU analogue of the
+    paper's constant-memory metadata), so the windowed reorder is a single
+    pass over HBM instead of slice-then-permute.  Blocked plane axes shrink
+    their block (by halving) until the base offset is block-aligned; batch
+    axes use unit blocks so any offset is exact.  A base so misaligned that
+    the plane blocks would degrade below the sublane floor raises
+    ValueError — dispatch then falls back to the two-pass form rather than
+    issuing element-granular DMAs.
+    """
+    N = x.ndim
+    perm = tuple(int(p) for p in perm)
+    if sorted(perm) != list(range(N)):
+        raise ValueError(f"bad perm {perm} for rank {N}")
+    if len(base) != N or len(sizes) != N:
+        raise ValueError(f"base/sizes must have rank {N}")
+    for k in range(N):
+        if not (0 <= base[k] and base[k] + sizes[k] <= x.shape[k]):
+            raise ValueError(
+                f"window [{base[k]}, {base[k]}+{sizes[k]}) exceeds axis {k} "
+                f"of shape {x.shape}"
+            )
+    W = tuple(int(s) for s in sizes)
+
+    pr, pc, r_in, c_in, _ = _plan_blocks(perm, W, x.dtype)
+    br = _align_block(min(pr, W[r_in]), base[r_in]) if r_in is not None else 1
+    bc = _align_block(min(pc, W[c_in]), base[c_in])
+    # quality gate: misaligned bases shrink plane blocks; below the dtype's
+    # sublane floor the fused pass would be slower than slice-then-permute
+    sl = sublanes(x.dtype)
+    floor_r = min(sl, W[r_in]) if r_in is not None else 1
+    floor_c = min(sl, W[c_in])
+    if (r_in is not None and br < floor_r) or bc < floor_c:
+        raise ValueError(
+            f"window base {base} too misaligned for fused blocks "
+            f"({br}x{bc} < {floor_r}x{floor_c})"
+        )
+    interpret = force_interpret() if interpret is None else interpret
+    return _reorder_call(
+        x, perm, tuple(int(b) for b in base), W, br, bc, r_in, c_in,
+        grid_order, interpret,
+    )

@@ -86,6 +86,50 @@ def plan_transpose_tiles(
     return TilePlan(br, bc, cdiv(rows, br), cdiv(cols, bc))
 
 
+@dataclass(frozen=True)
+class VecTilePlan:
+    """Tile for the (rows, cols) transpose plane when every element carries
+    a contiguous V-deep vector payload (collapsed identity tail)."""
+
+    block_r: int
+    block_c: int
+    block_v: int
+    grid_r: int
+    grid_c: int
+    grid_v: int
+
+
+def plan_transpose_vec_tiles(rows: int, cols: int, vec: int, dtype) -> VecTilePlan:
+    """Tile a batched (B, R, C, V) -> (B, C, R, V) transpose.
+
+    V is the lane axis (it stays minor on both sides, so every DMA is a run
+    of V-contiguous elements); R and C only need sublane alignment.  The
+    whole payload is kept when it fits; otherwise V is blocked in LANES
+    multiples and the (r, c) tile shrinks to respect the VMEM budget.
+    """
+    itemsize = jnp.dtype(dtype).itemsize
+    sl = sublanes(dtype)
+    budget_elems = max(VMEM_BUDGET // (2 * itemsize), 1)
+
+    if vec <= LANES:
+        bv = vec
+    else:
+        bv = min(round_up(vec, LANES), max(LANES, budget_elems // (sl * sl) // LANES * LANES))
+        if bv > vec:
+            bv = vec
+    plane_budget = max(budget_elems // max(bv, 1), 1)
+    target = max(int(plane_budget ** 0.5), 1)
+    br = pick_block(rows, target, sl)
+    bc = pick_block(cols, target, sl)
+    while br * bc > plane_budget and bc > sl:
+        bc = max(sl, bc // 2)
+    while br * bc > plane_budget and br > sl:
+        br = max(sl, br // 2)
+    return VecTilePlan(
+        br, bc, bv, cdiv(rows, br), cdiv(cols, bc), cdiv(vec, bv)
+    )
+
+
 def plan_copy_tiles(rows: int, cols: int, dtype, *, target_rows: int = 512) -> TilePlan:
     """Tile a streaming (rows, cols) copy: cols stay full-width when they
     fit the budget (long contiguous DMAs), rows are blocked."""

@@ -6,6 +6,12 @@ head split/merge are §III-B permutes, the KV-cache prefill->decode layout
 swap is `rearrange.kv_cache_to_decode_layout`, fused-QKV splitting is a
 §III-C de-interlace.
 
+Every head split/merge below goes through the plan engine (core/plan.py):
+the (B, S, H, D)-swap family collapses to ONE batched 2-D transpose kernel
+with D-deep vector elements per call — the projection reshape is folded
+into the plan's canonical shape, so the hot per-layer permutes never
+materialize a reshape intermediate (DESIGN.md §3-§4).
+
 Shapes: q (B, Hq, Sq, D); k, v (B, Hkv, Skv, D); GQA groups G = Hq // Hkv.
 Softmax statistics are fp32 regardless of io dtype.
 """
@@ -243,6 +249,8 @@ def _project_qkv(p: dict, cfg, x: Array) -> tuple[Array, Array, Array]:
         qkv = qkv + p["b_qkv"]
     q, k, v = rr.split_qkv(qkv, cfg.n_heads, cfg.n_kv_heads, hd)
     b, s, _ = x.shape
+    # each split is one fused batched-transpose kernel (plan mode
+    # 'transpose'), directly producing the (B, H, S, D) attention layout
     q = rr.split_heads(q, cfg.n_heads)        # (B, Hq, S, D)
     k = rr.split_heads(k, cfg.n_kv_heads)
     v = rr.split_heads(v, cfg.n_kv_heads)

@@ -1,0 +1,274 @@
+"""Plan-driven rearrangement engine: collapse -> route -> cache.
+
+Covers the acceptance surface of the engine refactor:
+* equivalence vs the jnp.transpose / jnp.stack oracles across ranks 1-6,
+  every canonical mode, odd/unaligned shapes, and all supported dtypes
+  (kernels execute via the Pallas interpreter, not the oracle);
+* routing: the (B, S, H, D)-swap family hits the batched 2-D transpose
+  kernel, collapse reduces canonical rank, the generic path stays as the
+  fallback;
+* the plan cache returns the identical plan object on repeated calls;
+* each fused helper (split_heads / merge_heads / space_to_depth /
+  interlace / windowed reorder_nm) compiles to exactly ONE pallas_call.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import rearrange as rr
+from repro.core.plan import plan_rearrange
+from repro.kernels import ops, ref
+
+RNG = np.random.default_rng(7)
+
+DTYPES = [jnp.float32, jnp.bfloat16, jnp.int32, jnp.int8]
+
+
+def rand(shape, dtype):
+    if jnp.issubdtype(dtype, jnp.integer):
+        return jnp.asarray(RNG.integers(-100, 100, shape), dtype)
+    return jnp.asarray(RNG.standard_normal(shape), dtype)
+
+
+def n_pallas_calls(fn, *args) -> int:
+    """Count pallas_call eqns anywhere in the traced jaxpr (incl. nested)."""
+    return str(jax.make_jaxpr(fn)(*args)).count("pallas_call[")
+
+
+# ---------------------------------------------------------------------------
+# routing
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize(
+    "shape", [(2, 6, 4, 8), (2, 4, 6, 8), (8, 512, 16, 64), (3, 5, 7, 2)]
+)
+def test_head_permute_routes_to_batched_transpose(shape):
+    """(B, S, H, D) -> (0, 2, 1, 3) and (B, H, S, D) -> (0, 2, 1, 3) must
+    hit the batched 2-D transpose kernel with a collapsed batch axis."""
+    plan = plan_rearrange(shape, jnp.float32, (0, 2, 1, 3))
+    assert plan.mode == "transpose"
+    assert plan.kernel == "transpose2d_batched_vec"
+    b, r, c, v = plan.exec_shape
+    assert (b, r, c, v) == shape  # batch = B, plane = (S, H), vector = D
+
+
+@pytest.mark.parametrize(
+    "shape,perm,rank",
+    [
+        ((64, 4, 5), (1, 2, 0), 2),  # 3-cycle collapses to plain 2-D transpose
+        ((4, 5, 6, 7), (2, 0, 1, 3), 3),  # (0,1) merge -> (1, 0, 2) swap family
+        ((2, 3, 4, 5, 6), (0, 1, 3, 4, 2), 3),  # two merges
+    ],
+)
+def test_collapse_reduces_rank(shape, perm, rank):
+    plan = plan_rearrange(shape, jnp.float32, perm)
+    assert len(plan.canonical_shape) == rank
+    assert plan.mode == "transpose"
+
+
+@pytest.mark.parametrize(
+    "shape,perm,mode,kernel",
+    [
+        ((8, 16, 131), (0, 1, 2), "identity", "noop"),
+        ((2, 1, 3), (1, 0, 2), "identity", "noop"),  # size-1 axis move
+        ((5, 9), (1, 0), "transpose", "transpose2d_batched"),
+        ((3, 40, 50), (0, 2, 1), "transpose", "transpose2d_batched"),
+        ((2, 6, 4, 8), (0, 2, 1, 3), "transpose", "transpose2d_batched_vec"),
+        ((4, 5, 6, 128), (2, 1, 0, 3), "copy", "reorder_nd"),
+        ((2, 3, 4, 5, 6), (4, 2, 0, 3, 1), "reorder", "reorder_nd"),
+    ],
+)
+def test_plan_modes(shape, perm, mode, kernel):
+    plan = plan_rearrange(shape, jnp.float32, perm)
+    assert plan.mode == mode
+    assert plan.kernel == kernel
+
+
+def test_plan_validates_inputs():
+    with pytest.raises(ValueError, match="bad perm"):
+        plan_rearrange((4, 8, 16), jnp.float32, (0, 0, 1))
+    with pytest.raises(ValueError, match="grid_order"):
+        plan_rearrange((4, 8, 16), jnp.float32, (2, 0, 1), grid_order="sideways")
+
+
+@pytest.mark.parametrize(
+    "shape,perm", [((2, 0, 3), (1, 0, 2)), ((0,), (0,)), ((4, 0), (1, 0))]
+)
+def test_zero_size_arrays_are_noop(shape, perm, pallas_interpret):
+    plan = plan_rearrange(shape, jnp.float32, perm)
+    assert plan.mode == "identity" and plan.bytes_moved == 0
+    got = ops.permute(jnp.ones(shape, jnp.float32), perm)
+    assert got.shape == jnp.transpose(jnp.ones(shape, jnp.float32), perm).shape
+
+
+def test_plan_cache_returns_identical_object():
+    a = plan_rearrange((4, 8, 16, 32), jnp.bfloat16, (0, 2, 1, 3))
+    b = plan_rearrange((4, 8, 16, 32), jnp.bfloat16, (0, 2, 1, 3))
+    assert a is b
+    # dtype spellings normalize to the same key
+    c = plan_rearrange((4, 8, 16, 32), np.dtype("bfloat16"), (0, 2, 1, 3))
+    assert c is a
+    # grid_order is part of the key
+    d = plan_rearrange((4, 8, 16, 32), jnp.bfloat16, (0, 2, 1, 3), grid_order="in")
+    assert d is not a and d.grid_order == "in"
+
+
+# ---------------------------------------------------------------------------
+# equivalence vs jnp.transpose, every mode / rank 1-6 / odd shapes / dtypes
+# ---------------------------------------------------------------------------
+
+CASES = [
+    ((7,), (0,)),  # rank 1 identity
+    ((5, 9), (1, 0)),  # odd 2-D transpose
+    ((3, 40, 257), (0, 2, 1)),  # batched transpose, unaligned cols
+    ((64, 4, 5), (1, 2, 0)),  # collapses to 2-D transpose
+    ((2, 1, 3), (1, 0, 2)),  # identity via size-1 move
+    ((6, 24, 136), (2, 1, 0)),  # generic reorder
+    ((4, 5, 6, 130), (2, 1, 0, 3)),  # copy mode, unaligned vector tail
+    ((2, 6, 4, 8), (0, 2, 1, 3)),  # vec batched transpose
+    ((3, 4, 5, 6, 7), (4, 2, 0, 3, 1)),  # rank 5 generic
+    ((2, 3, 4, 5, 6, 7), (5, 0, 4, 1, 3, 2)),  # rank 6 generic
+    ((2, 3, 4, 5, 6, 7), (0, 1, 3, 2, 4, 5)),  # rank 6 swap family
+]
+
+
+@pytest.mark.parametrize("dtype", DTYPES)
+@pytest.mark.parametrize("shape,perm", CASES)
+def test_engine_matches_transpose_oracle(shape, perm, dtype, pallas_interpret):
+    x = rand(shape, dtype)
+    got = ops.permute(x, perm)
+    want = jnp.transpose(x, perm)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
+@pytest.mark.parametrize("grid_order", ["in", "out"])
+def test_engine_grid_order_policies(grid_order, pallas_interpret):
+    x = rand((4, 5, 6, 64), jnp.float32)
+    got = ops.permute(x, (2, 0, 3, 1), grid_order=grid_order)
+    np.testing.assert_array_equal(
+        np.asarray(got), np.asarray(jnp.transpose(x, (2, 0, 3, 1)))
+    )
+
+
+# ---------------------------------------------------------------------------
+# fused helpers: exactly one pallas_call each
+# ---------------------------------------------------------------------------
+
+
+def test_split_heads_single_kernel(pallas_interpret):
+    x = rand((2, 32, 16 * 8), jnp.float32)
+    assert n_pallas_calls(lambda t: rr.split_heads(t, 16), x) == 1
+    got = rr.split_heads(x, 16)
+    want = jnp.transpose(x.reshape(2, 32, 16, 8), (0, 2, 1, 3))
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
+def test_merge_heads_single_kernel(pallas_interpret):
+    x = rand((2, 16, 32, 8), jnp.float32)
+    assert n_pallas_calls(rr.merge_heads, x) == 1
+    got = rr.merge_heads(x)
+    want = jnp.transpose(x, (0, 2, 1, 3)).reshape(2, 32, 16 * 8)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+    # round trip
+    back = rr.split_heads(got, 16)
+    np.testing.assert_array_equal(np.asarray(back), np.asarray(x))
+
+
+def test_space_to_depth_single_kernel(pallas_interpret):
+    img = rand((2, 8, 12, 6), jnp.float32)
+    assert n_pallas_calls(lambda t: rr.space_to_depth(t, 2), img) == 1
+    got = rr.space_to_depth(img, 2)
+    want = (
+        img.reshape(2, 4, 2, 6, 2, 6)
+        .transpose(0, 1, 3, 2, 4, 5)
+        .reshape(2, 4, 6, 2 * 2 * 6)
+    )
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
+@pytest.mark.parametrize("n", [2, 3, 4])
+def test_interlace_nd_single_kernel_vs_stack_oracle(n, pallas_interpret):
+    arrays = [rand((3, 4, 256), jnp.float32) for _ in range(n)]
+    assert n_pallas_calls(lambda *a: rr.interlace(list(a)), *arrays) == 1
+    il = rr.interlace(arrays)
+    want = jnp.stack(arrays, axis=-1).reshape(3, 4, 256 * n)
+    np.testing.assert_array_equal(np.asarray(il), np.asarray(want))
+    back = rr.deinterlace(il, n)
+    assert n_pallas_calls(lambda t: rr.deinterlace(t, n)[0], il) == 1
+    for a, b in zip(arrays, back):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+# ---------------------------------------------------------------------------
+# fused windowed N->M reorder
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize(
+    "base,sizes,perm",
+    [
+        ((3, 7, 5, 11), (1, 30, 20, 1), (2, 1)),  # odd offsets, dropped dims
+        ((0, 0, 0, 0), (6, 50, 1, 32), (3, 0, 1)),  # aligned, keep 3 of 4
+        ((2, 0, 0, 0), (1, 50, 40, 32), (1, 3, 2)),  # full window on kept axes
+    ],
+)
+def test_reorder_nm_windowed_fused(base, sizes, perm, pallas_interpret):
+    x = rand((6, 50, 40, 32), jnp.float32)
+    got = ops.reorder_nm(x, perm, base=base, sizes=sizes)
+    want = ref.reorder_nm(x, perm, base=list(base), sizes=list(sizes))
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+    jaxpr = str(
+        jax.make_jaxpr(lambda t: ops.reorder_nm(t, perm, base=base, sizes=sizes))(x)
+    )
+    assert jaxpr.count("pallas_call[") == 1
+    assert "dynamic_slice" not in jaxpr  # the slice rides in the index_map
+
+
+def test_reorder_nm_misaligned_base_falls_back_correctly(pallas_interpret):
+    """A base too misaligned for fused blocks must still be correct (the
+    dispatch falls back to slice-then-permute instead of 1-wide DMAs)."""
+    x = rand((4, 64, 200), jnp.float32)
+    base, sizes, perm = (1, 3, 7), (2, 40, 150), (2, 1, 0)
+    got = ops.reorder_nm(x, perm, base=base, sizes=sizes)
+    want = ref.reorder_nm(x, perm, base=list(base), sizes=list(sizes))
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
+def test_reorder_nm_1d_window(pallas_interpret):
+    x = rand((256,), jnp.float32)
+    got = ops.reorder_nm(x, (0,), base=(64,), sizes=(128,))
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(x)[64:192])
+
+
+def test_interlace_zero_length_falls_back(pallas_interpret):
+    a = jnp.zeros((3, 0), jnp.float32)
+    out = ops.interlace([a, a])
+    assert out.shape == (3, 0)
+    backs = ops.deinterlace(out, 2)
+    assert all(b.shape == (3, 0) for b in backs)
+
+
+def test_interlace_rejects_mismatched_shapes(pallas_interpret):
+    """Same element count but different shapes must error (via the oracle),
+    not silently interleave garbage."""
+    a = rand((2, 64), jnp.float32)
+    b = rand((4, 32), jnp.float32)
+    with pytest.raises(Exception):
+        ops.interlace([a, b])
+
+
+def test_reorder_nm_rejects_wide_dropped_axis(pallas_interpret):
+    x = rand((4, 8, 16), jnp.float32)
+    with pytest.raises(ValueError, match="window size 1"):
+        ops.reorder_nm(x, (2, 1), base=(0, 0, 0), sizes=(3, 8, 16))
+
+
+def test_reorder_nm_full_rank_is_plain_permute(pallas_interpret):
+    x = rand((4, 8, 16), jnp.float32)
+    got = ops.reorder_nm(x, (2, 0, 1))
+    np.testing.assert_array_equal(
+        np.asarray(got), np.asarray(jnp.transpose(x, (2, 0, 1)))
+    )
