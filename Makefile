@@ -1,6 +1,7 @@
 # One-command verify recipes (CI + local).
 #
-#   make test            tier-1 suite (the ROADMAP verify command)
+#   make test            docs-check + tier-1 suite (the ROADMAP verify command)
+#   make docs-check      public-API docstring lint (tools/check_docstrings.py)
 #   make test-interpret  kernel/engine suites with every op forced through
 #                        the Pallas interpreter (REPRO_PALLAS_INTERPRET=1)
 #   make bench           benchmark harness; writes BENCH_rearrange.json
@@ -15,15 +16,18 @@
 
 PYTHONPATH := src
 
-.PHONY: test test-interpret bench lint check
+.PHONY: test test-interpret bench lint check docs-check
 
-test:
+docs-check:
+	python tools/check_docstrings.py
+
+test: docs-check
 	PYTHONPATH=$(PYTHONPATH) python -m pytest -x -q
 
 test-interpret:
 	PYTHONPATH=$(PYTHONPATH) REPRO_PALLAS_INTERPRET=1 python -m pytest -x -q \
 		tests/test_kernels.py tests/test_plan_engine.py tests/test_substrate.py \
-		tests/test_properties.py
+		tests/test_properties.py tests/test_stencil_engine.py
 
 bench:
 	PYTHONPATH=$(PYTHONPATH) python -m benchmarks.run

@@ -1,6 +1,17 @@
-"""Paper Fig. 2 / Table 4: 2-D FD stencil, orders I..IV, 4096^2 fp32."""
+"""Paper Fig. 2 / Table 4: 2-D FD stencil, orders I..IV, 4096^2 fp32 —
+plus the stencil plan engine's fused-vs-per-sweep comparison (DESIGN.md §9).
+
+The fused rows run a ``repeat(k)`` Jacobi program (one temporally-blocked
+kernel); the per-sweep rows run the same k sweeps as k separate stencil
+calls.  Effective bandwidth is normalized to the *useful* algorithmic
+traffic of the per-sweep schedule (k reads + k writes), so the fused row's
+higher GB/s directly reports the HBM round trips it deleted.  Rows land in
+``BENCH_stencil.json`` (see benchmarks/run.py) with the plan metadata.
+"""
 
 from __future__ import annotations
+
+import os
 
 import jax
 import jax.numpy as jnp
@@ -8,6 +19,45 @@ import numpy as np
 
 from benchmarks.common import row, time_fn
 from repro.core import stencil as st
+from repro.kernels import ops
+
+JACOBI = st.Stencil(((1, 0), (-1, 0), (0, 1), (0, -1)), (0.25, 0.25, 0.25, 0.25))
+SWEEPS = 8
+
+
+def _fused_vs_per_sweep(out: list[str], n: int, k: int, tag: str = "") -> None:
+    x = jnp.asarray(
+        np.random.default_rng(0).standard_normal((n, n)), jnp.float32
+    )
+    useful = 2 * x.size * 4 * k  # k sweeps x (read + write): the per-sweep basis
+    prog = JACOBI.repeat(k)
+    plan = prog.compile(x.shape, x.dtype)
+
+    def per_sweep(a):
+        for _ in range(k):
+            a = JACOBI(a)
+        return a
+
+    measured = "pallas" if ops.use_pallas() else "xla_oracle"
+    t = time_fn(jax.jit(per_sweep), x)
+    out.append(
+        row(
+            f"jacobi{n}{tag}_per_sweep_k{k}", t, useful,
+            variant="per_sweep", k=k, size=n, plan_mode="reference",
+            measured=measured,
+        )
+    )
+    t = time_fn(jax.jit(prog), x)
+    out.append(
+        row(
+            f"jacobi{n}{tag}_fused_k{k}", t, useful,
+            f"[plan {plan.bytes_per_sweep_path / max(plan.bytes_moved, 1):.1f}x]",
+            variant="fused", k=k, size=n, plan_mode=plan.mode,
+            measured=measured,
+            plan_bytes_fused=plan.bytes_moved,
+            plan_bytes_per_sweep=plan.bytes_per_sweep_path,
+        )
+    )
 
 
 def run() -> list[str]:
@@ -23,4 +73,21 @@ def run() -> list[str]:
     blur = st.box_blur(1)
     t = time_fn(jax.jit(lambda a: blur(a)), x)
     out.append(row("box_blur_3x3", t, nbytes))
+
+    # fused repeat(k) programs vs k separate sweeps, two problem sizes
+    for n in (2048, 4096):
+        _fused_vs_per_sweep(out, n, SWEEPS)
+
+    # the same comparison driven through the actual Pallas kernel (interpret
+    # mode off-TPU) on a small grid, so the fused kernel itself is measured
+    if jax.devices()[0].platform != "tpu":
+        prior = os.environ.get("REPRO_PALLAS_INTERPRET")
+        os.environ["REPRO_PALLAS_INTERPRET"] = "1"
+        try:
+            _fused_vs_per_sweep(out, 512, SWEEPS, tag="_interp")
+        finally:
+            if prior is None:
+                os.environ.pop("REPRO_PALLAS_INTERPRET", None)
+            else:
+                os.environ["REPRO_PALLAS_INTERPRET"] = prior
     return out

@@ -6,7 +6,8 @@ Prints ``name,us_per_call,derived`` CSV per row (derived = achieved GB/s
 and fraction of host memcpy — the paper's normalization), and writes the
 machine-readable record stream to ``BENCH_rearrange.json`` (op name,
 achieved GB/s, fraction of memcpy, plan mode) so the perf trajectory is
-tracked across PRs.
+tracked across PRs.  The stencil suite's rows (fused vs per-sweep plan
+engine comparison) are additionally written to ``BENCH_stencil.json``.
 """
 
 from __future__ import annotations
@@ -34,6 +35,11 @@ def main() -> None:
     ap.add_argument("--only", default="")
     ap.add_argument(
         "--json", default="BENCH_rearrange.json", help="machine-readable output path"
+    )
+    ap.add_argument(
+        "--json-stencil",
+        default="BENCH_stencil.json",
+        help="output path for the stencil suite's plan-engine rows",
     )
     args = ap.parse_args()
     only = set(args.only.split(",")) if args.only else None
@@ -66,6 +72,20 @@ def main() -> None:
             )
             f.write("\n")
         print(f"# wrote {args.json} ({len(common.RECORDS)} rows)", flush=True)
+
+    # the stencil plan-engine comparison gets its own tracked artifact
+    stencil_rows = [r for r in common.RECORDS if r.get("suite") == "stencil"]
+    if stencil_rows and args.json_stencil:
+        with open(args.json_stencil, "w") as f:
+            json.dump(
+                {"memcpy_gbps": round(common.memcpy_gbps(), 2), "rows": stencil_rows},
+                f,
+                indent=2,
+            )
+            f.write("\n")
+        print(
+            f"# wrote {args.json_stencil} ({len(stencil_rows)} rows)", flush=True
+        )
 
 
 if __name__ == "__main__":

@@ -5,7 +5,9 @@ Vorticity-streamfunction formulation:
     w_t + u w_x + v w_y = (1/Re) lap(w)
     lap(psi) = -w ;  u = psi_y ; v = -psi_x
 Jacobi iterations for the Poisson solve, central differences for
-advection/diffusion — every operator is a library Stencil.
+advection/diffusion — every operator is a library Stencil, and the whole
+Jacobi sweep loop is ONE fused ``repeat(k)`` stencil program (DESIGN.md §9):
+k HBM round trips collapse into a single temporally-blocked kernel.
 
   PYTHONPATH=src python examples/cfd_cavity.py [--n 128 --re 100 --steps 200]
 """
@@ -19,23 +21,33 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core.stencil import Stencil
+from repro.core.stencil import Stencil, functor_stage
 
 # library stencils (paper §III-D objects)
 LAP = Stencil(((0, 0), (1, 0), (-1, 0), (0, 1), (0, -1)), (-4.0, 1.0, 1.0, 1.0, 1.0))
 DDX = Stencil(((0, 1), (0, -1)), (0.5, -0.5))
 DDY = Stencil(((1, 0), (-1, 0)), (0.5, -0.5))
-JACOBI = Stencil(((1, 0), (-1, 0), (0, 1), (0, -1)), (0.25, 0.25, 0.25, 0.25))
+
+
+def _jacobi_with_source(shift, src):
+    # one Jacobi sweep of lap(psi) = -w: psi <- avg(neighbors) + (h^2/4) w;
+    # src() is the precomputed right-hand side riding as the aux operand
+    return 0.25 * (shift(1, 0) + shift(-1, 0) + shift(0, 1) + shift(0, -1)) + src()
+
+
+POISSON_SWEEP = functor_stage(_jacobi_with_source, 1)
 
 
 def step(w, psi, *, re: float, dt: float, h: float, u_lid: float, jacobi_iters: int):
-    # Poisson: lap(psi) = -w  (Jacobi; interior only, psi=0 on walls)
-    def jac(psi, _):
-        psi = JACOBI(psi) + (h * h / 4.0) * w
-        psi = psi.at[0, :].set(0).at[-1, :].set(0).at[:, 0].set(0).at[:, -1].set(0)
-        return psi, None
-
-    psi, _ = jax.lax.scan(jac, psi, None, length=jacobi_iters)
+    # Poisson: lap(psi) = -w.  Dirichlet psi=0 on the walls == solving on
+    # the interior view with a zero boundary condition, so the whole
+    # k-sweep Jacobi loop is one fused repeat(k) program (one pallas_call
+    # on the kernel path) instead of k HBM round trips.
+    rhs = (h * h / 4.0) * w[1:-1, 1:-1]
+    psi_int = POISSON_SWEEP.repeat(jacobi_iters)(
+        psi[1:-1, 1:-1], boundary="zero", aux=rhs
+    )
+    psi = jnp.pad(psi_int, 1)
 
     u = DDY(psi) / h
     v = -DDX(psi) / h
@@ -70,6 +82,11 @@ def main() -> None:
     dt = 0.2 * h * h * args.re  # stable explicit step
     w = jnp.zeros((n, n), jnp.float32)
     psi = jnp.zeros((n, n), jnp.float32)
+
+    plan = POISSON_SWEEP.repeat(args.jacobi).compile(
+        (n - 2, n - 2), jnp.float32, has_aux=True
+    )
+    print("poisson plan:", plan.describe())
 
     stepper = jax.jit(
         lambda w, psi: step(

@@ -47,6 +47,15 @@ def sobel_mag(shift):
 edges = st.apply_functor(img, sobel_mag, radius=1)
 print("sobel functor:", edges.shape)
 
+# --- fused stencil programs (temporal blocking, DESIGN.md §9) ---------------
+# blur-then-laplacian, 3 fused sweeps each: ONE kernel, one HBM round trip,
+# any of the four boundary modes (zero | nearest | reflect | periodic)
+prog = smooth.then(lap).repeat(3)
+out = prog(img, boundary="reflect")
+plan = prog.compile(img.shape, img.dtype, boundary="reflect")
+print("stencil program:", out.shape)
+print("  planner:", plan.describe())
+
 # --- model-facing helpers (how the LM framework uses the library) -----------
 h = jnp.asarray(rng.standard_normal((2, 16, 64)), jnp.float32)
 heads = rr.split_heads(h, 4)           # (B,S,H*D) -> (B,H,S,D)

@@ -37,6 +37,8 @@ def perm_to_paper_order(perm: Sequence[int]) -> tuple[int, ...]:
 
 
 def invert_perm(perm: Sequence[int]) -> tuple[int, ...]:
+    """Inverse permutation: ``transpose(transpose(x, perm), invert_perm(perm))
+    == x``."""
     inv = [0] * len(perm)
     for j, p in enumerate(perm):
         inv[p] = j
@@ -142,12 +144,10 @@ class Canonical:
     rows_axis: int | None
     cols_axis: int | None
 
-    @property
-    def plane_bytes(self) -> int | None:
-        return None
-
 
 def canonicalize(shape: Sequence[int], perm: Sequence[int]) -> Canonical:
+    """Coalesce adjacent axes and classify the residual movement — the
+    'collapse' half of the plan engine (DESIGN.md §3 step 1+2)."""
     cshape, cperm, _ = coalesce(shape, perm)
     n = len(cshape)
     if n <= 1 or cperm == tuple(range(n)):

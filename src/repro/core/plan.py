@@ -43,6 +43,10 @@ ICI_GBPS_PER_LINK = 50.0
 
 @dataclass(frozen=True)
 class RearrangePlan:
+    """Cached lowering decision for one permutation: the canonical
+    (collapsed) form, the kernel route, the chosen tiles, and the predicted
+    HBM traffic/roofline (DESIGN.md §3)."""
+
     mode: str  # identity | copy | transpose | reorder
     kernel: str  # noop | copy | transpose2d_batched[_vec] | reorder_nd
     canonical_shape: tuple[int, ...]
@@ -56,6 +60,7 @@ class RearrangePlan:
     roofline_s: float  # bytes / HBM bandwidth (one chip)
 
     def describe(self) -> str:
+        """One-line human-readable summary (benchmarks / debugging)."""
         return (
             f"{self.mode}: shape={self.canonical_shape} perm={self.canonical_perm} "
             f"kernel={self.kernel} tiles=({self.block_r},{self.block_c}) "

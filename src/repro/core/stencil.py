@@ -1,39 +1,72 @@
-"""Generic stencil API (paper §III-D): stencils as first-class objects.
+"""Generic stencil API (paper §III-D): stencils and stencil *programs* as
+first-class objects.
 
 The paper ships the stencil as a C++ functor compiled into the kernel; we
 ship it as a trace-time Python functor (or an (offsets, weights) table)
 compiled into the Pallas kernel.  ``Stencil`` objects compose: scale, add,
-and the standard finite-difference families are provided.
+``then`` (sequential stages) and ``repeat`` (k sweeps) build a
+:class:`StencilProgram` that the plan engine lowers to ONE fused
+`pallas_call` via temporal blocking (DESIGN.md §9) — the iterative-workload
+analogue of the rearrangement planner in `core/plan.py`:
+
+1. **describe** — a program is a tuple of stage descriptors (linear
+   (offsets, weights) tables and/or trace-time functors with a radius);
+2. **plan** — :func:`plan_stencil` picks the row-panel configuration and
+   predicts HBM traffic for the fused pipeline vs per-sweep execution;
+3. **cache** — plans are memoized on (shape, dtype, stages, boundary,
+   has_aux), so steady-state solvers (e.g. the CFD cavity example) pay
+   zero planning or retracing overhead after the first step.
 """
 
 from __future__ import annotations
 
-from dataclasses import dataclass
+import functools
+from dataclasses import dataclass, field
 from typing import Callable, Sequence
 
 import jax
 import jax.numpy as jnp
 
+from repro.core.plan import HBM_GBPS
 from repro.kernels import ops, ref
+from repro.kernels import stencil2d as st_k
+from repro.kernels.tiling import cdiv, round_up, sublanes
 
 Array = jax.Array
+
+#: boundary-condition family accepted by every stencil entry point, derived
+#: from the oracle's pad table (kernels/ref.py) so the copies cannot drift;
+#: the legacy alias ``'clamp'`` (= nearest) is accepted but not advertised.
+BOUNDARIES = tuple(b for b in ref.BOUNDARY_PAD_MODES if b != "clamp")
 
 
 @dataclass(frozen=True)
 class Stencil:
-    """A linear stencil: out[p] = sum_k weights[k] * in[p + offsets[k]]."""
+    """A linear stencil: ``out[p] = sum_k weights[k] * in[p + offsets[k]]``.
+
+    Example::
+
+        lap = Stencil(((0, 0), (1, 0), (-1, 0), (0, 1), (0, -1)),
+                      (-4.0, 1.0, 1.0, 1.0, 1.0))
+        y = lap(x)                       # one sweep, zero boundary
+        y = lap(x, boundary="reflect")   # any of the four boundary modes
+        prog = lap.repeat(8)             # 8 fused sweeps, ONE kernel
+    """
 
     offsets: tuple[tuple[int, int], ...]
     weights: tuple[float, ...]
 
     @property
     def radius(self) -> int:
+        """Chebyshev radius of the stencil's footprint."""
         return max(max(abs(dy), abs(dx)) for dy, dx in self.offsets)
 
     def __call__(self, x: Array, *, boundary: str = "zero") -> Array:
+        """Apply one sweep of the stencil to a 2-D grid ``x``."""
         return ops.stencil2d(x, self.offsets, self.weights, boundary=boundary)
 
     def scale(self, a: float) -> "Stencil":
+        """New stencil with every weight multiplied by ``a``."""
         return Stencil(self.offsets, tuple(a * w for w in self.weights))
 
     def __add__(self, other: "Stencil") -> "Stencil":
@@ -45,16 +78,288 @@ class Stencil:
         offs = tuple(sorted(table))
         return Stencil(offs, tuple(table[o] for o in offs))
 
+    def as_program(self) -> "StencilProgram":
+        """Lift this stencil into a one-stage :class:`StencilProgram`."""
+        return StencilProgram((("linear", self.offsets, self.weights),))
+
+    def then(self, other: "Stencil | StencilProgram") -> "StencilProgram":
+        """Sequential composition: ``self`` then ``other`` (one fused kernel).
+
+        Example::
+
+            prog = box_blur(1).then(fd_laplacian(1))  # blur, then laplacian
+            y = prog(x)                               # ONE pallas_call
+        """
+        return self.as_program().then(other)
+
+    def repeat(self, k: int) -> "StencilProgram":
+        """``k`` fused sweeps of this stencil (temporal blocking).
+
+        Example::
+
+            jacobi = Stencil(((1, 0), (-1, 0), (0, 1), (0, -1)), (0.25,) * 4)
+            y = jacobi.repeat(8)(x)   # == 8 sequential sweeps, ONE kernel
+        """
+        return self.as_program().repeat(k)
+
+
+@dataclass(frozen=True)
+class StencilPlan:
+    """Compiled lowering decision for a stencil program on a given grid.
+
+    Mirrors :class:`repro.core.plan.RearrangePlan`: routing (`mode`), the
+    chosen panel geometry, and the predicted HBM traffic of the fused
+    pipeline vs per-sweep execution so callers and benchmarks can compare
+    achieved vs predicted movement.
+    """
+
+    mode: str  # fused | reference
+    kernel: str  # stencil2d_pipeline | ref.stencil_pipeline
+    shape: tuple[int, int]
+    boundary: str
+    n_stages: int
+    total_radius: int
+    block_rows: int  # rows owned per grid panel (0 on the reference path)
+    halo_block_rows: int  # halo block height loaded above/below each panel
+    grid: int  # number of row panels
+    bytes_moved: int  # fused-path HBM traffic (reads incl. halo + 1 write)
+    bytes_per_sweep_path: int  # traffic of n_stages separate sweeps
+    roofline_s: float  # fused bytes / HBM bandwidth (one chip)
+    stages_exec: tuple = field(repr=False, hash=False, compare=False)
+
+    def describe(self) -> str:
+        """One-line human-readable summary (benchmarks / debugging)."""
+        saving = self.bytes_per_sweep_path / max(self.bytes_moved, 1)
+        return (
+            f"{self.mode}: shape={self.shape} stages={self.n_stages} "
+            f"radius={self.total_radius} boundary={self.boundary} "
+            f"panel=({self.block_rows}+2*{self.halo_block_rows} halo rows)x{self.grid} "
+            f"{self.bytes_moved/1e6:.2f} MB moved vs "
+            f"{self.bytes_per_sweep_path/1e6:.2f} MB per-sweep ({saving:.1f}x), "
+            f"roofline {self.roofline_s*1e6:.1f} us @ {HBM_GBPS} GB/s"
+        )
+
+
+def _stage_exec(desc) -> tuple[Callable, int]:
+    """Materialize a stage descriptor into the kernel's (functor, radius)."""
+    if desc[0] == "linear":
+        _, offsets, weights = desc
+        radius = max(max(abs(dy), abs(dx)) for dy, dx in offsets)
+        return st_k._linear_functor(offsets, weights), radius
+    _, functor, radius = desc
+    return functor, int(radius)
+
+
+@functools.lru_cache(maxsize=1024)
+def _plan_cached(
+    shape: tuple[int, int],
+    dtype_name: str,
+    stages: tuple,
+    boundary: str,
+    has_aux: bool,
+) -> StencilPlan:
+    H, W = shape
+    itemsize = jnp.dtype(dtype_name).itemsize
+    stages_exec = tuple(_stage_exec(d) for d in stages)
+    radii = tuple(r for _, r in stages_exec)
+    R = sum(radii)
+    n = H * W
+
+    def col_ok(r: int) -> bool:
+        if r == 0:
+            return True
+        if boundary == "reflect":
+            return W >= r + 1
+        if boundary == "periodic":
+            return W >= r
+        return True
+
+    br = rp = 0
+    mode = "reference"
+    if n > 0 and all(col_ok(r) for r in radii):
+        try:
+            br, rp, _ = st_k.pick_panel(H, W, dtype_name, R, boundary)
+            mode = "fused"
+        except ValueError:
+            br = rp = 0
+    grid = cdiv(H, br) if br else 0
+
+    # cost model: useful traffic is one read + one write of the grid; the
+    # fused path adds the apron redundancy (2*rp halo rows per panel, plus
+    # a second operand stream when an aux/source grid rides along), while
+    # the per-sweep path pays the full round trip once per stage.
+    n_streams = 2 if has_aux else 1
+    fused_reads = (n + 2 * rp * W * grid) * n_streams
+    bytes_fused = (fused_reads + n) * itemsize
+    sl = sublanes(dtype_name)
+    per_sweep = 0
+    for r in radii:
+        rp_s = round_up(r, sl) if (r and br) else 0
+        per_sweep += ((n + 2 * rp_s * W * (cdiv(H, br) if br else 0)) * n_streams + n)
+    bytes_per_sweep = per_sweep * itemsize
+
+    return StencilPlan(
+        mode=mode,
+        kernel="stencil2d_pipeline" if mode == "fused" else "ref.stencil_pipeline",
+        shape=shape,
+        boundary=boundary,
+        n_stages=len(stages_exec),
+        total_radius=R,
+        block_rows=br,
+        halo_block_rows=rp,
+        grid=grid,
+        bytes_moved=bytes_fused if mode == "fused" else bytes_per_sweep,
+        bytes_per_sweep_path=bytes_per_sweep,
+        roofline_s=(bytes_fused if mode == "fused" else bytes_per_sweep)
+        / (HBM_GBPS * 1e9),
+        stages_exec=stages_exec,
+    )
+
+
+@dataclass(frozen=True)
+class StencilProgram:
+    """A compiled-together sequence of stencil stages (DESIGN.md §9).
+
+    Built via :meth:`Stencil.then` / :meth:`Stencil.repeat` /
+    :func:`functor_stage`; applying the program lowers every stage into ONE
+    fused `pallas_call` with a ``sum(radius_i)``-row halo (temporal
+    blocking), matching ``len(stages)`` sequential sweeps to fp32 tolerance.
+
+    Example::
+
+        jacobi = Stencil(((1, 0), (-1, 0), (0, 1), (0, -1)), (0.25,) * 4)
+        prog = jacobi.repeat(8)
+        y = prog(x, boundary="reflect")         # one kernel, 8 sweeps
+        plan = prog.compile(x.shape, x.dtype)   # inspect the lowering
+        print(plan.describe())
+    """
+
+    stages: tuple[tuple, ...]
+
+    @property
+    def n_stages(self) -> int:
+        """Number of stages (sweeps) in the program."""
+        return len(self.stages)
+
+    @property
+    def total_radius(self) -> int:
+        """Halo rows each panel loads: the sum of all stage radii."""
+        return sum(_stage_exec(d)[1] for d in self.stages)
+
+    def then(self, other: "Stencil | StencilProgram") -> "StencilProgram":
+        """Append ``other`` (a stencil or a whole program) as later stage(s)."""
+        if isinstance(other, Stencil):
+            other = other.as_program()
+        return StencilProgram(self.stages + other.stages)
+
+    def repeat(self, k: int) -> "StencilProgram":
+        """Repeat the whole program ``k`` times (``k >= 1``)."""
+        if k < 1:
+            raise ValueError(f"repeat wants k >= 1, got {k}")
+        return StencilProgram(self.stages * k)
+
+    def compile(
+        self, shape: Sequence[int], dtype, *, boundary: str = "zero",
+        has_aux: bool = False,
+    ) -> StencilPlan:
+        """Plan (and cache) the lowering of this program for a grid.
+
+        Repeated calls with equal arguments return the *identical*
+        :class:`StencilPlan` object (lru cache keyed on shape, dtype, the
+        stage descriptors, boundary, and aux-presence).
+        """
+        return plan_stencil(shape, dtype, self.stages, boundary, has_aux)
+
+    def __call__(
+        self, x: Array, *, boundary: str = "zero", aux: Array | None = None
+    ) -> Array:
+        """Run the program on a 2-D grid.
+
+        ``aux`` optionally supplies a same-shape source grid; functor stages
+        then receive it as ``functor(shift, src)`` where ``src()`` yields
+        the aux band (e.g. the right-hand side of a Jacobi iteration).
+        """
+        if x.ndim != 2:
+            raise ValueError(f"stencil programs want 2-D grids, got {x.shape}")
+        if x.size == 0:
+            return x
+        plan = self.compile(
+            x.shape, x.dtype, boundary=boundary, has_aux=aux is not None
+        )
+        return ops.stencil_program(
+            x,
+            plan.stages_exec,
+            boundary=boundary,
+            block_rows=plan.block_rows or None,
+            aux=aux,
+            fused=plan.mode == "fused",
+        )
+
+
+def functor_stage(functor: Callable, radius: int) -> StencilProgram:
+    """One-stage program from an arbitrary trace-time functor.
+
+    ``functor(shift)`` (or ``functor(shift, src)`` in aux programs) may be
+    any jnp expression over ``shift(dy, dx)`` views — the paper's
+    compile-time C++ functor, as a Python closure.
+
+    Example::
+
+        damp = functor_stage(lambda s: 0.5 * s(0, 0) + 0.5 * s(0, 1), 1)
+        prog = damp.then(fd_laplacian(1)).repeat(2)
+    """
+    return StencilProgram((("functor", functor, int(radius)),))
+
+
+def plan_stencil(
+    shape: Sequence[int],
+    dtype,
+    stages: tuple,
+    boundary: str = "zero",
+    has_aux: bool = False,
+) -> StencilPlan:
+    """Plan (and cache) the lowering of stage descriptors for a grid.
+
+    The program-facing wrapper is :meth:`StencilProgram.compile`; this
+    entry point exists for benchmarks and tests that build descriptor
+    tuples directly.
+    """
+    if boundary not in ref.BOUNDARY_PAD_MODES:
+        raise ValueError(f"unknown boundary {boundary!r}; want one of {BOUNDARIES}")
+    shape_t = tuple(int(s) for s in shape)
+    if len(shape_t) != 2:
+        raise ValueError(f"stencil plans want 2-D shapes, got {shape_t}")
+    return _plan_cached(
+        shape_t, jnp.dtype(dtype).name, tuple(stages), boundary, bool(has_aux)
+    )
+
+
+def stencil_plan_cache_info():
+    """Expose the plan-memo stats (tests / benchmarks)."""
+    return _plan_cached.cache_info()
+
 
 def fd_laplacian(order: int) -> Stencil:
     """2-D Laplacian, central differences of accuracy 2*order (paper Fig. 2
-    orders I..IV)."""
+    orders I..IV).
+
+    Example::
+
+        y = fd_laplacian(2)(x)           # 9-point, 4th-order accurate
+        y = fd_laplacian(1).repeat(4)(x) # 4 fused diffusion sweeps
+    """
     offs, wts = ref.fd_stencil_offsets(order)
     return Stencil(tuple(offs), tuple(wts))
 
 
 def box_blur(radius: int = 1) -> Stencil:
-    """(2r+1)^2 box smoothing filter (the paper's image-filter example)."""
+    """(2r+1)^2 box smoothing filter (the paper's image-filter example).
+
+    Example::
+
+        smooth = box_blur(1)             # 3x3 mean filter
+        y = smooth(img, boundary="nearest")
+    """
     offs = tuple(
         (dy, dx)
         for dy in range(-radius, radius + 1)
@@ -67,8 +372,19 @@ def box_blur(radius: int = 1) -> Stencil:
 def apply_functor(
     x: Array, functor: Callable, radius: int, *, boundary: str = "zero"
 ) -> Array:
-    """Arbitrary (possibly non-linear) stencil functor — see
-    ``repro.kernels.stencil2d.stencil2d_functor``."""
+    """Single sweep of an arbitrary (possibly non-linear) stencil functor.
+
+    Example::
+
+        def sharpen(shift):
+            return 2.0 * shift(0, 0) - 0.25 * (
+                shift(-1, 0) + shift(1, 0) + shift(0, -1) + shift(0, 1))
+        y = apply_functor(img, sharpen, radius=1)
+
+    For multi-sweep functor pipelines use :func:`functor_stage` and
+    ``repeat`` — see ``repro.kernels.stencil2d.stencil2d_functor`` for the
+    kernel underneath.
+    """
     return ops.stencil2d_functor(x, functor, radius, boundary=boundary)
 
 

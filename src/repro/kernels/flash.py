@@ -96,6 +96,9 @@ def flash_attention(
     block_k: int = 512,
     interpret: bool | None = None,
 ) -> jax.Array:
+    """Blocked online-softmax attention over decode-layout (B, H, S, D)
+    tensors, GQA-aware (Hq a multiple of Hkv); out = softmax(qk^T/sqrt(d))v
+    with optional causal masking."""
     b, hq, sq, d = q.shape
     _, hkv, skv, _ = k.shape
     g = hq // hkv

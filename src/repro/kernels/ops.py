@@ -44,6 +44,8 @@ def _platform() -> str:
 
 
 def use_pallas() -> bool:
+    """True when dispatch should target the Pallas kernels (TPU, or any
+    platform under ``REPRO_PALLAS_INTERPRET=1``)."""
     if os.environ.get("REPRO_PALLAS_INTERPRET", "0") == "1":
         return True
     if os.environ.get("REPRO_DISABLE_PALLAS", "0") == "1":
@@ -61,6 +63,7 @@ def _interpret() -> bool:
 
 
 def copy(x: Array) -> Array:
+    """Materialized device copy (paper §III-A read/write kernel)."""
     if use_pallas():
         try:
             return copy_k.copy(x, interpret=_interpret())
@@ -70,18 +73,21 @@ def copy(x: Array) -> Array:
 
 
 def copy_range(x: Array, start, size: int) -> Array:
+    """Ranged access: copy ``x[start:start+size]`` along axis 0."""
     if use_pallas() and x.ndim == 2:
         return copy_k.copy_range(x, start, size, interpret=_interpret())
     return ref.copy_range(x, start, size)
 
 
 def gather_rows(x: Array, idx: Array) -> Array:
+    """Index-set access: rows of ``x`` (axis 0) selected by ``idx``."""
     if use_pallas() and x.ndim == 2:
         return gs_k.gather_rows(x, idx, interpret=_interpret())
     return ref.gather_rows(x, idx)
 
 
 def scatter_rows(x: Array, idx: Array, num_out: int | None = None) -> Array:
+    """Permutation scatter: ``out[idx[i]] = x[i]`` (idx injective)."""
     if (
         use_pallas()
         and x.ndim == 2
@@ -92,6 +98,8 @@ def scatter_rows(x: Array, idx: Array, num_out: int | None = None) -> Array:
 
 
 def transpose2d_batched(x: Array, *, diagonal: bool = False) -> Array:
+    """(B, R, C) -> (B, C, R) batched 2-D transpose (optionally with the
+    paper's diagonalized block walk, DESIGN.md §8)."""
     if use_pallas():
         return p3_k.transpose2d_batched(x, diagonal=diagonal, interpret=_interpret())
     return ref.transpose2d_batched(x)
@@ -141,6 +149,8 @@ def apply_plan(x: Array, plan: RearrangePlan) -> Array:
 
 
 def permute(x: Array, perm: Sequence[int], *, grid_order: str = "out") -> Array:
+    """N-D transpose through the plan engine: collapse -> route -> cached
+    plan -> at most ONE kernel pass (DESIGN.md §3)."""
     perm = tuple(int(p) for p in perm)
     if use_pallas():
         plan = plan_rearrange(x.shape, x.dtype, perm, grid_order=grid_order)
@@ -234,8 +244,14 @@ def stencil2d(
     *,
     boundary: str = "zero",
 ) -> Array:
-    if use_pallas() and boundary == "zero" and x.ndim == 2:
-        return st_k.stencil2d(x, offsets, weights, interpret=_interpret())
+    """Single weighted-sum stencil sweep (any of the four boundary modes)."""
+    if use_pallas() and boundary in st_k.BOUNDARIES and x.ndim == 2 and x.size:
+        try:
+            return st_k.stencil2d(
+                x, offsets, weights, boundary=boundary, interpret=_interpret()
+            )
+        except ValueError:
+            pass  # no fused configuration for this shape: oracle fallback
     return ref.stencil2d(x, offsets, weights, boundary=boundary)
 
 
@@ -246,6 +262,43 @@ def stencil2d_functor(
     *,
     boundary: str = "zero",
 ) -> Array:
-    if use_pallas() and boundary == "zero" and x.ndim == 2:
-        return st_k.stencil2d_functor(x, functor, radius, interpret=_interpret())
+    """Single generic-functor stencil sweep (trace-time specialization)."""
+    if use_pallas() and boundary in st_k.BOUNDARIES and x.ndim == 2 and x.size:
+        try:
+            return st_k.stencil2d_functor(
+                x, functor, radius, boundary=boundary, interpret=_interpret()
+            )
+        except ValueError:
+            pass
     return ref.stencil2d_functor(x, functor, radius, boundary=boundary)
+
+
+def stencil_program(
+    x: Array,
+    stages,
+    *,
+    boundary: str = "zero",
+    block_rows: int | None = None,
+    aux: Array | None = None,
+    fused: bool = True,
+) -> Array:
+    """Execute a compiled stencil program (tuple of (functor, radius)
+    stages — see ``core.stencil.StencilPlan.stages_exec``).
+
+    Fused temporal-blocking kernel on the Pallas path; per-sweep oracle
+    sweeps otherwise (or when the planner routed the program to the
+    reference path, ``fused=False``).
+    """
+    if fused and use_pallas() and x.size:
+        try:
+            return st_k.stencil2d_pipeline(
+                x,
+                stages,
+                boundary=boundary,
+                aux=aux,
+                block_rows=block_rows,
+                interpret=_interpret(),
+            )
+        except ValueError:
+            pass  # shape constraints changed underfoot: oracle fallback
+    return ref.stencil_pipeline(x, stages, boundary=boundary, aux=aux)

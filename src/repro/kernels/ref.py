@@ -124,6 +124,27 @@ def deinterlace(x: Array, n: int) -> list[Array]:
 # §III-D  generic 2-D stencil
 # ---------------------------------------------------------------------------
 
+# boundary-condition family (DESIGN.md §9): name -> jnp.pad mode.  'clamp'
+# is a back-compat alias for 'nearest'.
+BOUNDARY_PAD_MODES = {
+    "zero": "constant",
+    "nearest": "edge",
+    "clamp": "edge",
+    "reflect": "reflect",
+    "periodic": "wrap",
+}
+
+
+def pad_boundary(x: Array, radius: int, boundary: str) -> Array:
+    """Extend ``x`` by ``radius`` cells on every side per the boundary
+    condition: ``zero`` (constant 0), ``nearest`` (edge replicate),
+    ``reflect`` (mirror about the edge cell), ``periodic`` (wrap)."""
+    if boundary not in BOUNDARY_PAD_MODES:
+        raise ValueError(
+            f"unknown boundary {boundary!r}; want one of {sorted(BOUNDARY_PAD_MODES)}"
+        )
+    return jnp.pad(x, radius, mode=BOUNDARY_PAD_MODES[boundary])
+
 
 def stencil2d(
     x: Array,
@@ -134,11 +155,11 @@ def stencil2d(
 ) -> Array:
     """Weighted-sum stencil: ``out[y,x] = sum_k w[k] * in[y+dy_k, x+dx_k]``.
 
-    boundary: 'zero' pads with zeros, 'clamp' replicates the edge.
+    boundary: one of ``zero | nearest | reflect | periodic`` (see
+    :func:`pad_boundary`; 'clamp' is accepted as an alias for 'nearest').
     """
     r = max(max(abs(dy), abs(dx)) for dy, dx in offsets)
-    mode = "constant" if boundary == "zero" else "edge"
-    xp = jnp.pad(x, r, mode=mode)
+    xp = pad_boundary(x, r, boundary)
     h, w = x.shape
     out = jnp.zeros_like(x)
     for (dy, dx), wk in zip(offsets, weights):
@@ -152,6 +173,7 @@ def stencil2d_functor(
     radius: int,
     *,
     boundary: str = "zero",
+    aux: Array | None = None,
 ) -> Array:
     """Generic functor stencil (the paper's template/functor mechanism).
 
@@ -162,9 +184,12 @@ def stencil2d_functor(
         def laplace(shift):
             return shift(-1, 0) + shift(1, 0) + shift(0, -1) + shift(0, 1) \
                    - 4.0 * shift(0, 0)
+
+    With ``aux`` (an extra same-shape array, e.g. a Poisson source term) the
+    functor is called as ``functor(shift, src)`` where ``src()`` returns the
+    aux grid.
     """
-    mode = "constant" if boundary == "zero" else "edge"
-    xp = jnp.pad(x, radius, mode=mode)
+    xp = pad_boundary(x, radius, boundary)
     h, w = x.shape
 
     def shift(dy: int, dx: int) -> Array:
@@ -172,7 +197,26 @@ def stencil2d_functor(
             raise ValueError(f"shift ({dy},{dx}) exceeds radius {radius}")
         return jax.lax.dynamic_slice(xp, (radius + dy, radius + dx), (h, w))
 
-    return functor(shift)
+    if aux is None:
+        return functor(shift)
+    return functor(shift, lambda: aux)
+
+
+def stencil_pipeline(
+    x: Array,
+    stages: Sequence[tuple[Callable[..., Array], int]],
+    *,
+    boundary: str = "zero",
+    aux: Array | None = None,
+) -> Array:
+    """Oracle for a multi-stage stencil program: apply each ``(functor,
+    radius)`` stage as one full-grid sweep, re-extending the boundary
+    between sweeps.  This is the k-HBM-round-trip semantics the fused
+    temporal-blocking kernel (``stencil2d.stencil2d_pipeline``) must match.
+    """
+    for functor, radius in stages:
+        x = stencil2d_functor(x, functor, radius, boundary=boundary, aux=aux)
+    return x
 
 
 def fd_stencil_offsets(order: int) -> tuple[list[tuple[int, int]], list[float]]:

@@ -1,4 +1,5 @@
-"""Generic 2-D stencil kernel (paper §III-D), TPU-native.
+"""Generic 2-D stencil kernels (paper §III-D), TPU-native — single-sweep
+functor stencils and fused multi-stage pipelines (DESIGN.md §9).
 
 The CUDA kernel loads a 34x34 halo'd tile for a 32x32 block (overlapping,
 partially uncoalesced apron loads; texture-memory variants to soften the
@@ -10,14 +11,20 @@ TPU version:
   the full row width resident in VMEM — column halos are then free (they
   are just lane shifts within the panel), which deletes the paper's
   misaligned-apron problem instead of patching it with texture fetches.
-* the row halo is expressed by passing the input *three times* with
-  clamped index maps (prev / cur / next panel).  The Pallas pipeline DMAs
-  each as a full lane-aligned tile — the overlap costs one extra panel load
-  per block, the same 2*r/block_rows redundancy the paper reports, but
-  every load stays aligned.
-* boundary handling and partial-final-block garbage are killed in one move
-  by masking rows against their *global* row index (zero boundary).
-* the functor runs at **trace time** — the exact analogue of the paper's
+* the row halo is expressed by passing the input again with small
+  halo-block specs above and below the owned panel (clamped index maps).
+  The Pallas pipeline DMAs each as a lane-aligned tile — the overlap costs
+  ``2*halo_rows/block_rows`` extra reads per panel, the same apron
+  redundancy the paper reports, but every load stays aligned.
+* **temporal blocking** (`stencil2d_pipeline`): a program of k stages is
+  applied entirely in VMEM.  The panel is loaded once with a halo of
+  ``sum(radius_i)`` rows; each stage consumes its radius from the halo
+  (shrink-and-mask) and the final stage's panel is the only store.  One
+  HBM round trip replaces k.
+* the boundary-condition family ``zero | nearest | reflect | periodic`` is
+  resolved per stage against *global* row indices (which also kills OOB
+  garbage in the final partial panel) plus a boundary-correct column pad.
+* functors run at **trace time** — the exact analogue of the paper's
   compile-time C++ functor: any jnp expression over ``shift(dy, dx)`` views
   specializes the kernel with no interpretive overhead.
 """
@@ -25,80 +32,357 @@ TPU version:
 from __future__ import annotations
 
 import functools
-from typing import Callable
+from typing import Callable, Sequence
 
 import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
-from repro.kernels.tiling import cdiv, force_interpret, sublanes
+from repro.kernels.ref import BOUNDARY_PAD_MODES
+from repro.kernels.tiling import (
+    VMEM_BYTES,
+    cdiv,
+    force_interpret,
+    round_up,
+    sublanes,
+)
+
+# the supported boundary-condition family, derived from the oracle's pad
+# table so the two can never drift ('clamp' is a legacy 'nearest' alias).
+BOUNDARIES = tuple(BOUNDARY_PAD_MODES)
+
+Stage = tuple[Callable[..., jax.Array], int]
 
 
-def _stencil_kernel(functor, radius, br, H, W, prev_ref, cur_ref, next_ref, o_ref):
-    i = pl.program_id(0)
-    tile = jnp.concatenate([prev_ref[...], cur_ref[...], next_ref[...]], axis=0)
-    # rows [br - r, 2*br + r) of the 3-panel tile == halo'd panel (br+2r, W)
-    sub = jax.lax.slice_in_dim(tile, br - radius, 2 * br + radius, axis=0)
-    # zero rows that fall outside the domain (handles both the boundary
-    # condition and OOB garbage in the final partial panel).  2-D iota —
-    # Mosaic requires >=2-D iota on TPU.
-    rows_iota = jax.lax.broadcasted_iota(jnp.int32, (br + 2 * radius, 1), 0)
-    grow = i * br + rows_iota - radius  # global row ids, (br+2r, 1)
-    valid = (grow >= 0) & (grow < H)
-    sub = jnp.where(valid, sub, jnp.zeros((), sub.dtype))
-    # zero-pad columns for the lane-shift halo
-    subp = jnp.pad(sub, ((0, 0), (radius, radius)))
+@functools.lru_cache(maxsize=512)
+def _linear_functor(offsets: tuple, weights: tuple) -> Callable:
+    """Build (and memoize) the weighted-sum functor for a linear stencil.
 
-    def shift(dy: int, dx: int) -> jax.Array:
-        if max(abs(dy), abs(dx)) > radius:
-            raise ValueError(f"shift ({dy},{dx}) exceeds radius {radius}")
-        return jax.lax.slice(
-            subp, (radius + dy, radius + dx), (radius + dy + br, radius + dx + W)
+    Memoizing on the (offsets, weights) table keeps the functor's identity
+    stable across calls, so jit tracing caches hit instead of respecializing
+    the kernel for every invocation of the same stencil.
+    """
+
+    def functor(shift, *_unused):
+        acc = None
+        for (dy, dx), w in zip(offsets, weights):
+            term = w * shift(dy, dx)
+            acc = term if acc is None else acc + term
+        return acc
+
+    return functor
+
+
+def _smallest_divisor_at_least(n: int, lo: int) -> int:
+    """Smallest divisor of ``n`` that is >= ``lo`` (``n`` itself worst case)."""
+    for d in range(max(lo, 1), n):
+        if n % d == 0:
+            return d
+    return n
+
+
+def pick_panel(
+    H: int,
+    W: int,
+    dtype,
+    total_radius: int,
+    boundary: str,
+    block_rows: int | None = None,
+) -> tuple[int, int, bool]:
+    """Choose the fused kernel's row-panel configuration.
+
+    Returns ``(block_rows, halo_block_rows, wrap_local)``:
+
+    * ``block_rows`` — rows owned per grid step;
+    * ``halo_block_rows`` — row count of the above/below halo blocks (a
+      divisor of ``block_rows`` so halo offsets stay block-aligned); 0 when
+      the program needs no halo;
+    * ``wrap_local`` — periodic-only single-panel mode: the whole grid is
+      VMEM-resident and the wrap halo is built from resident rows.
+
+    Raises ``ValueError`` when no fused configuration exists for the shape
+    (the dispatch layer then falls back to per-sweep sweeps — the library
+    never fails on an awkward shape, it just loses the fast path).
+    """
+    sl = sublanes(dtype)
+    itemsize = jnp.dtype(dtype).itemsize
+    R = int(total_radius)
+    if H <= 0 or W <= 0:
+        raise ValueError("empty grid has no fused path")
+
+    if boundary == "periodic":
+        # periodic halos wrap across panels, which is only exact when the
+        # panel size divides H (no partial panel to misalign the wrap).
+        if block_rows is not None:
+            br = int(block_rows)
+            if br >= H:
+                br = H
+            elif H % br or br < max(R, 1):
+                raise ValueError(
+                    f"periodic needs block_rows dividing H and >= radius; "
+                    f"got {block_rows} for H={H}, radius={R}"
+                )
+        else:
+            divs = [d for d in range(max(R, 1), H + 1) if H % d == 0]
+            br = min(divs, key=lambda d: (d % sl != 0, abs(d - 64))) if divs else H
+        wrap_local = br >= H
+        rp = 0 if wrap_local else _smallest_divisor_at_least(br, R)
+    else:
+        wrap_local = False
+        if R == 0:
+            rp = 0
+            br = int(block_rows) if block_rows is not None else max(sl, min(64, H))
+        else:
+            if block_rows is not None:
+                br = int(block_rows)
+                if br < R:
+                    raise ValueError(f"block_rows {br} < total radius {R}")
+                rp = _smallest_divisor_at_least(br, R)
+            else:
+                rp = round_up(R, sl)
+                br = round_up(max(min(64, H), sl, R), rp)
+
+    # conservative VMEM sanity: halo'd working panel plus pipeline buffers,
+    # plus the (T, T) one-hot boundary-gather matrix and f32 panel cast the
+    # nearest/reflect paths build per stage
+    T = br + 2 * R
+    need = T * (W + 2 * R) * itemsize * 6
+    if boundary in ("nearest", "clamp", "reflect"):
+        need += T * T * 4 + T * (W + 2 * R) * 4
+    if need > VMEM_BYTES:
+        raise ValueError(
+            f"fused stencil panel ({br}+2*{R}, {W}) exceeds the VMEM budget"
         )
+    return br, rp, wrap_local
 
-    o_ref[...] = functor(shift)
+
+def _pipeline_kernel(
+    stages, boundary, br, rp, H, W, R, has_aux, wrap_local, *refs
+):
+    i = pl.program_id(0)
+    o_ref = refs[-1]
+    n_per = 1 if (R == 0 or wrap_local) else 3
+    x_refs = refs[:n_per]
+    a_refs = refs[n_per:-1]
+
+    def band(rs):
+        # assemble the halo'd panel: nominal global rows [i*br - R, (i+1)*br + R)
+        if wrap_local:
+            # single panel owns the whole grid (br == H): the periodic halo
+            # is built from resident rows, m wraps deep when R > H
+            c = rs[0][...]
+            m = cdiv(R, H) if R else 0
+            big = jnp.concatenate([c] * (2 * m + 1), axis=0) if m else c
+            return jax.lax.slice_in_dim(big, m * H - R, m * H + H + R, axis=0)
+        if R == 0:
+            return rs[0][...]
+        t = jnp.concatenate([rs[0][...], rs[1][...], rs[2][...]], axis=0)
+        return jax.lax.slice_in_dim(t, rp - R, rp + br + R, axis=0)
+
+    tile = band(x_refs)
+    atile = band(a_refs) if has_aux else None
+    if has_aux and boundary != "periodic":
+        # zero OOB aux rows so final-partial-panel garbage (possibly NaN)
+        # cannot poison rows that survive the shrink
+        ga = jax.lax.broadcasted_iota(jnp.int32, (br + 2 * R, 1), 0) + i * br - R
+        atile = jnp.where((ga >= 0) & (ga < H), atile, jnp.zeros((), atile.dtype))
+
+    h = R
+    for functor, r in stages:
+        T = br + 2 * h
+        g0 = i * br - h
+        # global row ids of the current band (2-D iota — Mosaic wants >=2-D)
+        g = jax.lax.broadcasted_iota(jnp.int32, (T, 1), 0) + g0
+        if boundary == "periodic":
+            # periodic content is already the wrapped extension (mod index
+            # maps / wrap_local assembly) and stays so under each stage
+            cur = tile
+        else:
+            inside = (g >= 0) & (g < H)
+            cur = jnp.where(inside, tile, jnp.zeros((), tile.dtype))
+            if boundary != "zero":
+                # re-extend the boundary from in-domain rows: a one-hot
+                # row-gather (pos may fall outside the band for rows deeper
+                # than this stage needs; those resolve to 0 and are shrunk
+                # away before they can matter).  Panels whose band lies
+                # fully in-domain skip it — the gather would be identity.
+                if boundary == "reflect" and H > 1:
+                    p = 2 * H - 2
+                    m = g % p
+                    src = jnp.where(m < H, m, p - m)
+                else:  # nearest / clamp (and reflect on a 1-row grid)
+                    src = jnp.clip(g, 0, H - 1)
+                pos = src - g0
+                cols = jax.lax.broadcasted_iota(jnp.int32, (T, T), 1)
+
+                def _regather(c, _pos=pos, _cols=cols):
+                    sel = (_cols == _pos).astype(jnp.float32)
+                    return jax.lax.dot_general(
+                        sel,
+                        c.astype(jnp.float32),
+                        (((1,), (0,)), ((), ())),
+                        preferred_element_type=jnp.float32,
+                    ).astype(c.dtype)
+
+                touches_edge = (g0 < 0) | (g0 + T > H)
+                cur = jax.lax.cond(touches_edge, _regather, lambda c: c, cur)
+        # column halo: boundary-correct pad of r lanes per side (the full
+        # row is resident, so these are static lane shifts — free)
+        if r == 0:
+            curp = cur
+        elif boundary == "zero":
+            curp = jnp.pad(cur, ((0, 0), (r, r)))
+        elif boundary in ("nearest", "clamp"):
+            left = jnp.broadcast_to(jax.lax.slice(cur, (0, 0), (T, 1)), (T, r))
+            right = jnp.broadcast_to(jax.lax.slice(cur, (0, W - 1), (T, W)), (T, r))
+            curp = jnp.concatenate([left, cur, right], axis=1)
+        elif boundary == "reflect":
+            left = jax.lax.rev(jax.lax.slice(cur, (0, 1), (T, r + 1)), (1,))
+            right = jax.lax.rev(jax.lax.slice(cur, (0, W - r - 1), (T, W - 1)), (1,))
+            curp = jnp.concatenate([left, cur, right], axis=1)
+        else:  # periodic
+            left = jax.lax.slice(cur, (0, W - r), (T, W))
+            right = jax.lax.slice(cur, (0, 0), (T, r))
+            curp = jnp.concatenate([left, cur, right], axis=1)
+
+        h2 = h - r
+        rows_out = br + 2 * h2
+
+        def shift(dy: int, dx: int, _curp=curp, _r=r, _rows=rows_out):
+            if max(abs(dy), abs(dx)) > _r:
+                raise ValueError(f"shift ({dy},{dx}) exceeds stage radius {_r}")
+            return jax.lax.slice(
+                _curp, (_r + dy, _r + dx), (_r + dy + _rows, _r + dx + W)
+            )
+
+        if has_aux:
+            def src_view(_a=atile, _h2=h2, _rows=rows_out):
+                return jax.lax.slice(_a, (R - _h2, 0), (R - _h2 + _rows, W))
+
+            tile = functor(shift, src_view)
+        else:
+            tile = functor(shift)
+        h = h2
+    o_ref[...] = tile.astype(o_ref.dtype)
 
 
 @functools.partial(
-    jax.jit, static_argnames=("functor", "radius", "block_rows", "interpret")
+    jax.jit, static_argnames=("stages", "boundary", "block_rows", "interpret")
 )
+def stencil2d_pipeline(
+    x: jax.Array,
+    stages: Sequence[Stage],
+    *,
+    boundary: str = "zero",
+    aux: jax.Array | None = None,
+    block_rows: int | None = None,
+    interpret: bool | None = None,
+) -> jax.Array:
+    """Run a multi-stage stencil program in ONE fused `pallas_call`.
+
+    ``stages`` is a tuple of ``(functor, radius)`` pairs; each functor is
+    called as ``functor(shift)`` (or ``functor(shift, src)`` when ``aux``
+    is given, where ``src()`` yields the aux band, e.g. a Poisson source
+    term).  Stages apply in sequence with the boundary condition re-applied
+    between them — semantically identical to ``len(stages)`` full-grid
+    sweeps (`ref.stencil_pipeline`) but with a single HBM round trip via
+    temporal blocking: each grid panel loads a ``sum(radius_i)``-row halo
+    once, runs every stage in VMEM, and stores once.
+    """
+    if x.ndim != 2:
+        raise ValueError(f"stencil pipeline wants 2-D input, got {x.shape}")
+    if boundary not in BOUNDARIES:
+        raise ValueError(f"unknown boundary {boundary!r}; want one of {BOUNDARIES}")
+    stages = tuple((f, int(r)) for f, r in stages)
+    if not stages:
+        raise ValueError("empty stencil program")
+    if any(r < 0 for _, r in stages):
+        raise ValueError("negative stage radius")
+    H, W = x.shape
+    R = sum(r for _, r in stages)
+    for _, r in stages:
+        if r and boundary == "reflect" and W < r + 1:
+            raise ValueError(f"reflect columns need W >= radius+1, got W={W}")
+        if r and boundary == "periodic" and W < r:
+            raise ValueError(f"periodic columns need W >= radius, got W={W}")
+    has_aux = aux is not None
+    if has_aux and aux.shape != x.shape:
+        raise ValueError(f"aux shape {aux.shape} != grid shape {x.shape}")
+
+    br, rp, wrap_local = pick_panel(H, W, x.dtype, R, boundary, block_rows)
+    nb = cdiv(H, br)
+    interpret = force_interpret() if interpret is None else interpret
+
+    def im_cur(i):
+        return (i, 0)
+
+    if wrap_local or R == 0:
+        per_input = [pl.BlockSpec((br, W), im_cur)]
+    else:
+        q = br // rp
+        nq = cdiv(H, rp)
+        if boundary == "periodic":
+            below = lambda i: ((i * q - 1) % nq, 0)  # noqa: E731
+            above = lambda i: (((i + 1) * q) % nq, 0)  # noqa: E731
+        else:
+            below = lambda i: (jnp.maximum(i * q - 1, 0), 0)  # noqa: E731
+            above = lambda i: (jnp.minimum((i + 1) * q, nq - 1), 0)  # noqa: E731
+        per_input = [
+            pl.BlockSpec((rp, W), below),
+            pl.BlockSpec((br, W), im_cur),
+            pl.BlockSpec((rp, W), above),
+        ]
+
+    operands = [x] * len(per_input)
+    in_specs = list(per_input)
+    if has_aux:
+        operands += [aux] * len(per_input)
+        in_specs += list(per_input)
+
+    return pl.pallas_call(
+        functools.partial(
+            _pipeline_kernel,
+            stages,
+            boundary,
+            br,
+            rp,
+            H,
+            W,
+            R,
+            has_aux,
+            wrap_local,
+        ),
+        grid=(nb,),
+        in_specs=in_specs,
+        out_specs=pl.BlockSpec((br, W), im_cur),
+        out_shape=jax.ShapeDtypeStruct((H, W), x.dtype),
+        interpret=interpret,
+    )(*operands)
+
+
 def stencil2d_functor(
     x: jax.Array,
     functor: Callable,
     radius: int,
     *,
+    boundary: str = "zero",
     block_rows: int | None = None,
     interpret: bool | None = None,
 ) -> jax.Array:
-    """Apply a generic stencil functor over a 2-D grid (zero boundary).
+    """Apply a generic stencil functor over a 2-D grid (single sweep).
 
     ``functor(shift)`` -> Array, where ``shift(dy, dx)`` yields the panel
     shifted by (dy, dx).  See ``repro.kernels.ref.stencil2d_functor`` for
-    the oracle semantics.
+    the oracle semantics.  A one-stage special case of
+    :func:`stencil2d_pipeline`.
     """
-    if x.ndim != 2:
-        raise ValueError(f"stencil2d wants 2-D input, got {x.shape}")
-    H, W = x.shape
-    sl = sublanes(x.dtype)
-    br = block_rows or max(sl, min(64, H))
-    if radius > br:
-        raise ValueError(f"radius {radius} > block_rows {br}")
-    nb = cdiv(H, br)
-
-    in_specs = [
-        pl.BlockSpec((br, W), lambda i: (jnp.maximum(i - 1, 0), 0)),
-        pl.BlockSpec((br, W), lambda i: (i, 0)),
-        pl.BlockSpec((br, W), lambda i: (jnp.minimum(i + 1, nb - 1), 0)),
-    ]
-    interpret = force_interpret() if interpret is None else interpret
-    return pl.pallas_call(
-        functools.partial(_stencil_kernel, functor, radius, br, H, W),
-        grid=(nb,),
-        in_specs=in_specs,
-        out_specs=pl.BlockSpec((br, W), lambda i: (i, 0)),
-        out_shape=jax.ShapeDtypeStruct((H, W), x.dtype),
+    return stencil2d_pipeline(
+        x,
+        ((functor, int(radius)),),
+        boundary=boundary,
+        block_rows=block_rows,
         interpret=interpret,
-    )(x, x, x)
+    )
 
 
 def stencil2d(
@@ -106,21 +390,19 @@ def stencil2d(
     offsets,
     weights,
     *,
+    boundary: str = "zero",
     block_rows: int | None = None,
     interpret: bool | None = None,
 ) -> jax.Array:
-    """Weighted-sum stencil via the functor kernel (zero boundary)."""
-    radius = max(max(abs(dy), abs(dx)) for dy, dx in offsets)
+    """Weighted-sum stencil via the functor kernel (single sweep)."""
     offs = tuple((int(dy), int(dx)) for dy, dx in offsets)
     wts = tuple(float(w) for w in weights)
-
-    def functor(shift):
-        acc = None
-        for (dy, dx), w in zip(offs, wts):
-            term = w * shift(dy, dx)
-            acc = term if acc is None else acc + term
-        return acc
-
+    radius = max(max(abs(dy), abs(dx)) for dy, dx in offs)
     return stencil2d_functor(
-        x, functor, radius, block_rows=block_rows, interpret=interpret
+        x,
+        _linear_functor(offs, wts),
+        radius,
+        boundary=boundary,
+        block_rows=block_rows,
+        interpret=interpret,
     )

@@ -35,10 +35,12 @@ def sublanes(dtype) -> int:
 
 
 def round_up(x: int, m: int) -> int:
+    """Round ``x`` up to the next multiple of ``m``."""
     return -(-x // m) * m
 
 
 def cdiv(a: int, b: int) -> int:
+    """Ceiling division (grid-step counts)."""
     return -(-a // b)
 
 
@@ -62,6 +64,7 @@ class TilePlan:
 
     @property
     def vmem_bytes_per_buf(self) -> int:
+        """Elements per pipeline buffer (multiply by itemsize for bytes)."""
         return self.block_r * self.block_c
 
 

@@ -1,0 +1,273 @@
+"""Stencil plan engine: fused multi-stage pipelines via temporal blocking.
+
+Covers the acceptance surface of the stencil-engine PR (DESIGN.md §9):
+* oracle equivalence of a fused ``repeat(k)`` program vs k sequential
+  reference sweeps for every boundary mode, radii 1-2, fp32/bf16,
+  non-multiple-of-panel heights, and zero-size inputs;
+* a fused program (k >= 4) lowers to exactly ONE pallas_call;
+* the plan cache returns the identical plan object on repeated calls;
+* ``then`` composition, trace-time functor stages, and aux (source-term)
+  programs match their sequential references;
+* kernel-level panel/boundary corner cases (forced small panels, periodic
+  mod-index-map wrap, halo deeper than the grid).
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import stencil as st
+from repro.kernels import ops, ref
+from repro.kernels import stencil2d as st_k
+
+RNG = np.random.default_rng(11)
+
+BOUNDARIES = ["zero", "nearest", "reflect", "periodic"]
+
+
+def rand(shape, dtype=jnp.float32):
+    return jnp.asarray(RNG.standard_normal(shape), dtype)
+
+
+def sweeps(x, stencil: st.Stencil, k: int, boundary: str):
+    """k sequential full-grid reference sweeps — the fused oracle."""
+    for _ in range(k):
+        x = ref.stencil2d(x, stencil.offsets, stencil.weights, boundary=boundary)
+    return x
+
+
+def n_pallas_calls(fn, *args) -> int:
+    return str(jax.make_jaxpr(fn)(*args)).count("pallas_call[")
+
+
+def tol(dtype):
+    return dict(rtol=2e-2, atol=2e-2) if dtype == jnp.bfloat16 else dict(
+        rtol=1e-5, atol=1e-5
+    )
+
+
+# ---------------------------------------------------------------------------
+# fused repeat(k) vs k sequential sweeps
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize("radius", [1, 2])
+@pytest.mark.parametrize("boundary", BOUNDARIES)
+def test_repeat_matches_sequential_sweeps(boundary, radius, dtype, pallas_interpret):
+    """H=67 is a non-multiple of the default 64-row panel (partial final
+    panel); radius 2 uses the 9-point fd_laplacian(2)."""
+    s = st.fd_laplacian(radius).scale(0.1)
+    x = rand((67, 33), dtype)
+    got = s.repeat(4)(x, boundary=boundary)
+    want = sweeps(x, s, 4, boundary)
+    np.testing.assert_allclose(
+        np.asarray(got, np.float32), np.asarray(want, np.float32), **tol(dtype)
+    )
+
+
+@pytest.mark.parametrize("shape", [(8, 128), (64, 64), (70, 17), (3, 9)])
+def test_repeat_shapes_zero_boundary(shape, pallas_interpret):
+    """Sub-panel, exact, ragged, and halo-deeper-than-grid heights."""
+    s = st.fd_laplacian(1).scale(0.2)
+    x = rand(shape)
+    got = s.repeat(5)(x)
+    want = sweeps(x, s, 5, "zero")
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=1e-5, atol=1e-5)
+
+
+@pytest.mark.parametrize("shape", [(0, 16), (16, 0), (0, 0)])
+def test_zero_size_inputs(shape, pallas_interpret):
+    prog = st.fd_laplacian(1).repeat(4)
+    out = prog(jnp.zeros(shape, jnp.float32))
+    assert out.shape == shape
+
+
+# ---------------------------------------------------------------------------
+# single fused pallas_call + plan cache
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("boundary", BOUNDARIES)
+def test_repeat4_single_pallas_call(boundary, pallas_interpret):
+    prog = st.fd_laplacian(1).scale(0.1).repeat(4)
+    x = rand((64, 40))
+    assert n_pallas_calls(lambda t: prog(t, boundary=boundary), x) == 1
+    plan = prog.compile(x.shape, x.dtype, boundary=boundary)
+    assert plan.mode == "fused" and plan.kernel == "stencil2d_pipeline"
+
+
+def test_deep_repeat_single_pallas_call(pallas_interpret):
+    """k=8 with radius 1: a 8-row halo, still one kernel."""
+    prog = st.fd_laplacian(1).scale(0.1).repeat(8)
+    x = rand((128, 32))
+    assert n_pallas_calls(prog, x) == 1
+
+
+def test_plan_cache_returns_identical_object():
+    a = st.fd_laplacian(1).repeat(6).compile((256, 128), jnp.float32)
+    b = st.fd_laplacian(1).repeat(6).compile((256, 128), jnp.float32)
+    assert a is b  # distinct program objects, same descriptors -> same plan
+    c = st.fd_laplacian(1).repeat(6).compile((256, 128), jnp.float32, boundary="reflect")
+    assert c is not a and c.boundary == "reflect"
+    d = st.fd_laplacian(1).repeat(6).compile((256, 128), jnp.bfloat16)
+    assert d is not a
+
+
+def test_plan_cost_model_prefers_fusion():
+    plan = st.fd_laplacian(1).repeat(8).compile((4096, 4096), jnp.float32)
+    assert plan.mode == "fused"
+    assert plan.bytes_per_sweep_path > 4 * plan.bytes_moved  # ~8x ideal
+    assert plan.grid == 4096 // plan.block_rows
+    assert "fused" in plan.describe()
+
+
+def test_plan_reference_fallback_on_tiny_columns():
+    """reflect columns need W >= radius+1; the planner must route the
+    program to the reference path instead of failing."""
+    plan = st.fd_laplacian(2).repeat(2).compile((64, 2), jnp.float32, boundary="reflect")
+    assert plan.mode == "reference"
+    x = rand((64, 2))
+    prog = st.fd_laplacian(2).repeat(2)
+    got = prog(x, boundary="reflect")
+    want = sweeps(x, st.fd_laplacian(2), 2, "reflect")
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=1e-5, atol=1e-5)
+
+
+# ---------------------------------------------------------------------------
+# composition: then / functor stages / aux programs
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("boundary", BOUNDARIES)
+def test_then_composition_mixed_radii(boundary, pallas_interpret):
+    blur, lap = st.box_blur(2), st.fd_laplacian(1)
+    prog = blur.then(lap).repeat(2)  # radii 2,1,2,1 -> halo 6
+    assert prog.n_stages == 4 and prog.total_radius == 6
+    x = rand((48, 24))
+    got = prog(x, boundary=boundary)
+    want = x
+    for s in [blur, lap, blur, lap]:
+        want = ref.stencil2d(want, s.offsets, s.weights, boundary=boundary)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=1e-5, atol=1e-5)
+
+
+def _shift_max(shift):
+    return jnp.maximum(jnp.maximum(shift(0, -1), shift(0, 1)), shift(0, 0))
+
+
+def test_functor_stage_nonlinear_pipeline(pallas_interpret):
+    """Non-linear trace-time functor stages compose with linear ones."""
+    prog = st.functor_stage(_shift_max, 1).then(st.box_blur(1)).repeat(2)
+    x = rand((40, 30))
+    got = prog(x)
+    want = x
+    for _ in range(2):
+        want = ref.stencil2d_functor(want, _shift_max, 1)
+        want = ref.stencil2d(want, st.box_blur(1).offsets, st.box_blur(1).weights)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=1e-5, atol=1e-5)
+    assert n_pallas_calls(prog, x) == 1
+
+
+def _jacobi_src(shift, src):
+    return 0.25 * (shift(1, 0) + shift(-1, 0) + shift(0, 1) + shift(0, -1)) + src()
+
+
+def test_aux_source_term_program(pallas_interpret):
+    """Jacobi iteration with a right-hand side rides as the aux operand
+    (the CFD cavity Poisson solve, examples/cfd_cavity.py)."""
+    prog = st.functor_stage(_jacobi_src, 1).repeat(6)
+    x, b = rand((67, 31)), rand((67, 31))
+    got = prog(x, aux=b)
+    want = x
+    for _ in range(6):
+        want = ref.stencil2d_functor(want, _jacobi_src, 1, aux=b)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=1e-5, atol=1e-5)
+    assert n_pallas_calls(lambda t, a: prog(t, aux=a), x, b) == 1
+
+
+# ---------------------------------------------------------------------------
+# kernel-level panel / boundary corner cases
+# ---------------------------------------------------------------------------
+
+
+def _lap(shift, *_):
+    return shift(-1, 0) + shift(1, 0) + shift(0, -1) + shift(0, 1) - 4.0 * shift(0, 0)
+
+
+@pytest.mark.parametrize("boundary", ["zero", "nearest", "reflect"])
+def test_forced_small_panels_partial_final(boundary):
+    """block_rows=16 over H=50: four panels, ragged final panel."""
+    x = rand((50, 21))
+    stages = ((_lap, 1),) * 4
+    got = st_k.stencil2d_pipeline(
+        x, stages, boundary=boundary, block_rows=16, interpret=True
+    )
+    want = ref.stencil_pipeline(x, stages, boundary=boundary)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=1e-5, atol=1e-4)
+
+
+def test_periodic_multi_panel_mod_index_maps():
+    """H=48 with block_rows=16 exercises the wrap-around halo blocks."""
+    x = rand((48, 19))
+    stages = ((_lap, 1),) * 4
+    got = st_k.stencil2d_pipeline(
+        x, stages, boundary="periodic", block_rows=16, interpret=True
+    )
+    want = ref.stencil_pipeline(x, stages, boundary="periodic")
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=1e-5, atol=1e-4)
+
+
+def test_periodic_halo_deeper_than_grid():
+    """R=5 > H=3: the wrap halo must tile the grid multiple times."""
+    x = rand((3, 9))
+    stages = ((_lap, 1),) * 5
+    got = st_k.stencil2d_pipeline(x, stages, boundary="periodic", interpret=True)
+    want = ref.stencil_pipeline(x, stages, boundary="periodic")
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=1e-5, atol=1e-4)
+
+
+def test_single_sweep_boundary_family_dispatch(pallas_interpret):
+    """ops.stencil2d now routes every boundary mode through the kernel."""
+    s = st.fd_laplacian(1)
+    x = rand((33, 20))
+    for boundary in BOUNDARIES:
+        got = ops.stencil2d(x, s.offsets, s.weights, boundary=boundary)
+        want = ref.stencil2d(x, s.offsets, s.weights, boundary=boundary)
+        np.testing.assert_allclose(
+            np.asarray(got), np.asarray(want), rtol=1e-5, atol=1e-5
+        )
+
+
+# ---------------------------------------------------------------------------
+# validation
+# ---------------------------------------------------------------------------
+
+
+def test_program_rejects_bad_inputs():
+    prog = st.fd_laplacian(1).repeat(2)
+    with pytest.raises(ValueError, match="2-D"):
+        prog(jnp.zeros((4, 4, 4), jnp.float32))
+    with pytest.raises(ValueError, match="k >= 1"):
+        prog.repeat(0)
+    with pytest.raises(ValueError, match="boundary"):
+        prog.compile((32, 32), jnp.float32, boundary="sideways")
+
+
+def test_kernel_rejects_bad_block_rows():
+    x = rand((64, 32))
+    with pytest.raises(ValueError, match="block_rows"):
+        st_k.stencil2d_pipeline(
+            x, ((_lap, 1),) * 4, block_rows=2, interpret=True
+        )
+
+
+def test_shift_beyond_stage_radius_raises():
+    x = rand((32, 32))
+
+    def too_far(shift):
+        return shift(2, 0)
+
+    with pytest.raises(ValueError, match="exceeds stage radius"):
+        st_k.stencil2d_pipeline(x, ((too_far, 1),), interpret=True)

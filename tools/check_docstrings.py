@@ -1,0 +1,92 @@
+"""Docstring lint for the public API surface (``make docs-check``).
+
+Walks the AST of every module under the given roots (default:
+``src/repro/core`` and ``src/repro/kernels``) and fails if any *public*
+symbol lacks a docstring:
+
+* the module itself;
+* module-level functions and classes not prefixed with ``_``;
+* public methods of public classes (dunders other than ``__call__`` are
+  exempt, as are ``@property`` bodies of dataclass field wrappers — i.e.
+  nothing is exempt except underscore names and dunders).
+
+Usage::
+
+    python tools/check_docstrings.py [root ...]
+"""
+
+from __future__ import annotations
+
+import ast
+import pathlib
+import sys
+
+DEFAULT_ROOTS = ["src/repro/core", "src/repro/kernels"]
+
+FuncDef = (ast.FunctionDef, ast.AsyncFunctionDef)
+
+
+def _is_public(name: str) -> bool:
+    if name.startswith("__") and name.endswith("__"):
+        return name == "__call__"  # documented operator surface
+    return not name.startswith("_")
+
+
+def check_module(path: pathlib.Path) -> list[str]:
+    """Return 'path:line: message' entries for every missing docstring."""
+    tree = ast.parse(path.read_text(), filename=str(path))
+    missing: list[str] = []
+    if ast.get_docstring(tree) is None:
+        missing.append(f"{path}:1: module docstring missing")
+    for node in tree.body:
+        if isinstance(node, FuncDef) and _is_public(node.name):
+            if ast.get_docstring(node) is None:
+                missing.append(
+                    f"{path}:{node.lineno}: function `{node.name}` undocumented"
+                )
+        elif isinstance(node, ast.ClassDef) and _is_public(node.name):
+            if ast.get_docstring(node) is None:
+                missing.append(
+                    f"{path}:{node.lineno}: class `{node.name}` undocumented"
+                )
+            for sub in node.body:
+                if isinstance(sub, FuncDef) and _is_public(sub.name):
+                    if ast.get_docstring(sub) is None:
+                        missing.append(
+                            f"{path}:{sub.lineno}: method "
+                            f"`{node.name}.{sub.name}` undocumented"
+                        )
+    return missing
+
+
+def main(argv: list[str]) -> int:
+    """Lint every .py file under the given roots; exit 1 on any miss."""
+    roots = argv or DEFAULT_ROOTS
+    missing: list[str] = []
+    n_files = 0
+    for root in roots:
+        root_path = pathlib.Path(root)
+        if not root_path.is_dir():
+            print(f"docs-check: root `{root}` does not exist")
+            return 1
+        n_root = 0
+        for path in sorted(root_path.rglob("*.py")):
+            if "__pycache__" in path.parts:
+                continue
+            n_root += 1
+            missing.extend(check_module(path))
+        if n_root == 0:
+            print(f"docs-check: root `{root}` contains no Python modules")
+            return 1
+        n_files += n_root
+    if missing:
+        print(f"docs-check: {len(missing)} public symbol(s) lack docstrings:")
+        for line in missing:
+            print(f"  {line}")
+        return 1
+    print(f"docs-check: OK ({n_files} modules, all public symbols documented)")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main(sys.argv[1:]))
