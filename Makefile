@@ -5,6 +5,8 @@
 #   make test-interpret  kernel/engine suites with every op forced through
 #                        the Pallas interpreter (REPRO_PALLAS_INTERPRET=1)
 #   make bench           benchmark harness; writes BENCH_rearrange.json
+#                        (+ BENCH_stencil.json / BENCH_moe.json)
+#   make bench-moe       MoE dispatch suite only; writes BENCH_moe.json
 #   make lint            byte-compile + import sanity (no external linters
 #                        are installed in the container)
 #
@@ -16,7 +18,7 @@
 
 PYTHONPATH := src
 
-.PHONY: test test-interpret bench lint check docs-check
+.PHONY: test test-interpret bench bench-moe lint check docs-check
 
 docs-check:
 	python tools/check_docstrings.py
@@ -31,6 +33,9 @@ test-interpret:
 
 bench:
 	PYTHONPATH=$(PYTHONPATH) python -m benchmarks.run
+
+bench-moe:
+	PYTHONPATH=$(PYTHONPATH) python -m benchmarks.run --only moe_dispatch --json ''
 
 lint:
 	python -m compileall -q src tests benchmarks examples

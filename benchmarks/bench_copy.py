@@ -18,13 +18,14 @@ def run() -> list[str]:
         x = jnp.asarray(np.random.default_rng(0).standard_normal(n), jnp.float32)
         x = x.reshape(-1, 1024)
         t = time_fn(copy, x)
-        out.append(row(f"copy_{mb}MB", t, 2 * n * 4))
+        out.append(row(f"copy_{mb}MB", t, 2 * x.nbytes))
     # ranged read
     x = jnp.asarray(np.random.default_rng(0).standard_normal((65536, 1024)), jnp.float32)
     t = time_fn(jax.jit(lambda a: ops.copy_range(a, jnp.int32(123), 32768)), x)
-    out.append(row("copy_range_128MB", t, 2 * 32768 * 1024 * 4))
-    # index-set gather (random permutation rows)
+    out.append(row("copy_range_128MB", t, 2 * 32768 * 1024 * x.dtype.itemsize))
+    # index-set gather (random permutation rows); traffic counts the data
+    # rows both ways plus the int32 index-table stream
     idx = jnp.asarray(np.random.default_rng(1).permutation(65536), jnp.int32)
     t = time_fn(jax.jit(ops.gather_rows), x, idx)
-    out.append(row("gather_rows_256MB", t, 2 * x.size * 4))
+    out.append(row("gather_rows_256MB", t, 2 * x.nbytes + idx.nbytes))
     return out

@@ -18,7 +18,7 @@ def run() -> list[str]:
         arrays = [
             jnp.asarray(rng.standard_normal(length), jnp.float32) for _ in range(n)
         ]
-        nbytes = 2 * n * length * 4
+        nbytes = 2 * sum(a.nbytes for a in arrays)
         il = jax.jit(lambda *a: ops.interlace(list(a)))
         t = time_fn(il, *arrays)
         out.append(row(f"interlace_n{n}", t, nbytes))

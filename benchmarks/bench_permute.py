@@ -36,7 +36,7 @@ def _table1() -> list[str]:
     x = jnp.asarray(
         np.random.default_rng(0).standard_normal((128, 256, 512)), jnp.float32
     )
-    nbytes = 2 * x.size * 4
+    nbytes = 2 * x.nbytes
     out = []
     measured = "pallas" if ops.use_pallas() else "xla_oracle"
     for order in ORDERS:
@@ -68,7 +68,7 @@ def _head_family() -> list[str]:
     try:
         for name, shape, perm in HEAD_SHAPES:
             x = jnp.asarray(rng.standard_normal(shape), jnp.float32)
-            nbytes = 2 * x.size * 4
+            nbytes = 2 * x.nbytes
             plan = plan_rearrange(shape, x.dtype, perm)
             t_engine = time_fn(jax.jit(lambda a, p=perm: ops.permute(a, p)), x)
             t_seed = time_fn(

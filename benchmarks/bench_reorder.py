@@ -39,7 +39,7 @@ def run() -> list[str]:
             row(
                 f"reorder_{'-'.join(map(str, order))}",
                 t,
-                2 * x.size * 4,
+                2 * x.nbytes,
                 f"[{plan.mode}, coalesced {len(canon.shape)}D]",
                 plan_mode=plan.mode,
                 kernel=plan.kernel,

@@ -29,7 +29,7 @@ def _fused_vs_per_sweep(out: list[str], n: int, k: int, tag: str = "") -> None:
     x = jnp.asarray(
         np.random.default_rng(0).standard_normal((n, n)), jnp.float32
     )
-    useful = 2 * x.size * 4 * k  # k sweeps x (read + write): the per-sweep basis
+    useful = 2 * x.nbytes * k  # k sweeps x (read + write): the per-sweep basis
     prog = JACOBI.repeat(k)
     plan = prog.compile(x.shape, x.dtype)
 
@@ -63,7 +63,7 @@ def _fused_vs_per_sweep(out: list[str], n: int, k: int, tag: str = "") -> None:
 def run() -> list[str]:
     out = []
     x = jnp.asarray(np.random.default_rng(0).standard_normal((4096, 4096)), jnp.float32)
-    nbytes = 2 * x.size * 4  # in + out (the stencil reads each cell ~1x via halo reuse)
+    nbytes = 2 * x.nbytes  # in + out (the stencil reads each cell ~1x via halo reuse)
     for order in (1, 2, 3, 4):
         s = st.fd_laplacian(order)
         fn = jax.jit(lambda a, s=s: s(a))

@@ -7,7 +7,9 @@ and fraction of host memcpy — the paper's normalization), and writes the
 machine-readable record stream to ``BENCH_rearrange.json`` (op name,
 achieved GB/s, fraction of memcpy, plan mode) so the perf trajectory is
 tracked across PRs.  The stencil suite's rows (fused vs per-sweep plan
-engine comparison) are additionally written to ``BENCH_stencil.json``.
+engine comparison) are additionally written to ``BENCH_stencil.json``,
+and the MoE dispatch suite's rows (dense vs rowwise-sort vs fused-sort
+IndexPlan comparison) to ``BENCH_moe.json``.
 """
 
 from __future__ import annotations
@@ -41,6 +43,11 @@ def main() -> None:
         default="BENCH_stencil.json",
         help="output path for the stencil suite's plan-engine rows",
     )
+    ap.add_argument(
+        "--json-moe",
+        default="BENCH_moe.json",
+        help="output path for the MoE dispatch suite's plan-engine rows",
+    )
     args = ap.parse_args()
     only = set(args.only.split(",")) if args.only else None
 
@@ -73,19 +80,18 @@ def main() -> None:
             f.write("\n")
         print(f"# wrote {args.json} ({len(common.RECORDS)} rows)", flush=True)
 
-    # the stencil plan-engine comparison gets its own tracked artifact
-    stencil_rows = [r for r in common.RECORDS if r.get("suite") == "stencil"]
-    if stencil_rows and args.json_stencil:
-        with open(args.json_stencil, "w") as f:
-            json.dump(
-                {"memcpy_gbps": round(common.memcpy_gbps(), 2), "rows": stencil_rows},
-                f,
-                indent=2,
-            )
-            f.write("\n")
-        print(
-            f"# wrote {args.json_stencil} ({len(stencil_rows)} rows)", flush=True
-        )
+    # per-engine comparisons get their own tracked artifacts
+    for suite, path in (("stencil", args.json_stencil), ("moe_dispatch", args.json_moe)):
+        suite_rows = [r for r in common.RECORDS if r.get("suite") == suite]
+        if suite_rows and path:
+            with open(path, "w") as f:
+                json.dump(
+                    {"memcpy_gbps": round(common.memcpy_gbps(), 2), "rows": suite_rows},
+                    f,
+                    indent=2,
+                )
+                f.write("\n")
+            print(f"# wrote {path} ({len(suite_rows)} rows)", flush=True)
 
 
 if __name__ == "__main__":

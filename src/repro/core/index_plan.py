@@ -1,0 +1,202 @@
+"""Index-set planner: block -> route -> cache (DESIGN.md §4).
+
+The paper's §III-A index-set kernels read/write "a specified set of
+indices" off a constant-memory table.  PR 1 gave permutations a plan
+engine (`core/plan.py`) and PR 2 gave stencils one (`core/stencil.py`);
+this module is the third leg — **data-dependent** movement — and follows
+the same three-step contract:
+
+1. **block** — the index table is reshaped to ``(nB, block_rows)`` row
+   blocks so each grid step moves ``block_rows`` rows instead of one (the
+   batching the paper gets from multi-row thread blocks).  In-kernel run
+   detection collapses blocks whose indices form a contiguous run into a
+   single strided block copy — the index-table analogue of PR 1's axis
+   collapsing, but resolved at run time because the table is data.
+2. **route** — pick the kernel for ``(semantics, shape)``:
+   ``gather`` / ``scatter`` -> the blocked masked gather
+   (`kernels.gather_scatter.gather_rows_blocked`; a scatter is executed
+   as a gather through the inverted table), ``gather_combine`` -> the
+   fused gather+weighted-combine kernel (ONE `pallas_call` for the whole
+   MoE combine).  Degenerate sizes route to ``noop``/``oracle``.
+3. **cache** — plans are memoized on ``(src_shape, dtype, n_out,
+   semantics, masked, top_k)`` so steady-state serving steps pay zero
+   planning overhead (repeated calls return the *identical* plan object).
+
+Sentinel semantics: a negative index means "no source row" and the kernel
+zero-fills (gather) or contributes zero (combine) — in-kernel masking via
+``pl.when``, which is what lets `models.moe.moe_sort` drop its
+sentinel-row concatenates.
+"""
+
+from __future__ import annotations
+
+import functools
+from dataclasses import dataclass
+from typing import Sequence
+
+import jax.numpy as jnp
+
+from repro.core.plan import HBM_GBPS
+from repro.kernels.tiling import VMEM_BUDGET, cdiv, round_up, sublanes
+
+#: semantics accepted by :func:`plan_index_op`.
+SEMANTICS = ("gather", "scatter", "gather_combine")
+
+#: row-block target: enough rows per grid step to amortize per-step
+#: overhead without starving the double-buffered VMEM budget.
+BLOCK_ROWS_TARGET = 64
+
+
+@dataclass(frozen=True)
+class IndexPlan:
+    """Cached lowering decision for one index-set movement.
+
+    Mirrors :class:`repro.core.plan.RearrangePlan`: the kernel route, the
+    row-block geometry, and the predicted HBM traffic (data rows plus the
+    int32 index-table stream) so callers and benchmarks can compare
+    achieved vs predicted movement.
+
+    Example::
+
+        plan = plan_index_op((4096, 512), jnp.bfloat16, 4096, "gather")
+        print(plan.describe())
+    """
+
+    semantics: str  # gather | scatter | gather_combine
+    mode: str  # blocked | oracle | noop
+    kernel: str  # gather_rows_blocked | gather_combine_blocked | ref | noop
+    n_src: int  # rows in the source array
+    n_out: int  # rows produced
+    row_elems: int  # elements per row (C)
+    block_rows: int  # rows moved per grid step (br)
+    grid: int  # number of row blocks (nB)
+    table_rows: int  # padded index-table length (grid * block_rows [* top_k])
+    masked: bool  # negative indices zero-fill
+    top_k: int  # combine fan-in (1 for gather/scatter)
+    bytes_moved: int  # data read + write + index-table traffic
+    roofline_s: float  # bytes / HBM bandwidth (one chip)
+
+    def describe(self) -> str:
+        """One-line human-readable summary (benchmarks / debugging)."""
+        return (
+            f"{self.semantics}: {self.mode} kernel={self.kernel} "
+            f"src={self.n_src}x{self.row_elems} out={self.n_out} "
+            f"blocks={self.grid}x{self.block_rows} rows"
+            f"{f' k={self.top_k}' if self.top_k > 1 else ''} "
+            f"{self.bytes_moved/1e6:.2f} MB moved, "
+            f"roofline {self.roofline_s*1e6:.1f} us @ {HBM_GBPS} GB/s"
+        )
+
+
+@functools.lru_cache(maxsize=4096)
+def _plan_cached(
+    n_src: int,
+    row_elems: int,
+    dtype_name: str,
+    n_out: int,
+    semantics: str,
+    masked: bool,
+    top_k: int,
+) -> IndexPlan:
+    itemsize = jnp.dtype(dtype_name).itemsize
+
+    def _mk(mode, kernel, br, grid, table_rows, bytes_moved):
+        return IndexPlan(
+            semantics=semantics,
+            mode=mode,
+            kernel=kernel,
+            n_src=n_src,
+            n_out=n_out,
+            row_elems=row_elems,
+            block_rows=br,
+            grid=grid,
+            table_rows=table_rows,
+            masked=masked,
+            top_k=top_k,
+            bytes_moved=bytes_moved,
+            roofline_s=bytes_moved / (HBM_GBPS * 1e9),
+        )
+
+    if n_out == 0 or row_elems == 0:
+        return _mk("noop", "noop", 1, 0, 0, 0)
+    if n_src == 0:
+        # nothing to read: every index is a sentinel; output is zeros
+        return _mk("noop", "noop", 1, 0, 0, n_out * row_elems * itemsize)
+
+    # row-block geometry: full-width rows (long contiguous DMAs), the row
+    # count bounded by the double-buffered VMEM budget.  Combine keeps
+    # top_k source rows per output row resident, so its budget divides by k.
+    sl = sublanes(dtype_name)
+    row_bytes = max(row_elems * itemsize, 1)
+    br_budget = max(VMEM_BUDGET // (2 * row_bytes * top_k), 1)
+    br = min(round_up(BLOCK_ROWS_TARGET, sl), max(br_budget // sl * sl, sl), n_out)
+    grid = cdiv(n_out, br)
+
+    # traffic: each output row is one read + one write of row_bytes (upper
+    # bound under masking), plus the int32 index-table stream; combine
+    # reads top_k source rows and a float32 gate per (row, k).
+    if semantics == "gather_combine":
+        bytes_moved = (
+            n_out * top_k * row_bytes  # source rows in
+            + n_out * row_bytes  # combined rows out
+            + n_out * top_k * 4  # back table
+            + n_out * top_k * 4  # gates
+        )
+        return _mk(
+            "blocked", "gather_combine_blocked", br, grid, grid * br * top_k, bytes_moved
+        )
+    bytes_moved = 2 * n_out * row_bytes + n_out * 4
+    if semantics == "scatter":
+        # executed as a masked gather through the inverted table; the
+        # inversion itself is an int32 table op (n_src * 4 extra bytes)
+        bytes_moved += n_src * 4
+    return _mk("blocked", "gather_rows_blocked", br, grid, grid * br, bytes_moved)
+
+
+def plan_index_op(
+    src_shape: Sequence[int],
+    dtype,
+    n_out: int,
+    semantics: str,
+    *,
+    masked: bool = False,
+    top_k: int = 1,
+) -> IndexPlan:
+    """Plan (and cache) an index-set movement.
+
+    ``src_shape`` is the 2-D source array shape ``(n_src, C)``; ``n_out``
+    the number of output rows (for ``scatter`` that is the *destination*
+    row count); ``semantics`` one of ``gather | scatter | gather_combine``.
+    ``masked`` enables sentinel handling (negative index -> zero row) and
+    ``top_k`` is the combine fan-in.
+
+    Example::
+
+        plan = plan_index_op((1024, 256), jnp.float32, 2048, "gather",
+                             masked=True)
+        assert plan is plan_index_op((1024, 256), jnp.float32, 2048,
+                                     "gather", masked=True)  # cached
+    """
+    if semantics not in SEMANTICS:
+        raise ValueError(f"unknown semantics {semantics!r}; want one of {SEMANTICS}")
+    if len(src_shape) != 2:
+        raise ValueError(f"index plans want 2-D sources, got {tuple(src_shape)}")
+    if n_out < 0:
+        raise ValueError(f"n_out must be >= 0, got {n_out}")
+    if top_k < 1:
+        raise ValueError(f"top_k must be >= 1, got {top_k}")
+    n_src, row_elems = (int(s) for s in src_shape)
+    return _plan_cached(
+        n_src,
+        row_elems,
+        jnp.dtype(dtype).name,
+        int(n_out),
+        semantics,
+        bool(masked),
+        int(top_k),
+    )
+
+
+def index_plan_cache_info():
+    """Expose the plan-memo stats (tests / benchmarks)."""
+    return _plan_cached.cache_info()

@@ -3,11 +3,32 @@
 The paper's basic access kernels support gathering/scattering rows by an
 index table; in CUDA the table lives in constant memory.  On TPU the table
 is **scalar-prefetched** (`pltpu.PrefetchScalarGridSpec`): it lands in SMEM
-before the grid runs, and the BlockSpec index_map reads it to choose which
-row block each grid step DMAs.  This is the exact functional analogue of
-constant memory: small, uniformly read metadata off the datapath.
+before the grid runs, and the kernel reads it to choose which rows each
+grid step DMAs.  This is the exact functional analogue of constant memory:
+small, uniformly read metadata off the datapath.
 
-This kernel is the framework's MoE dispatch/combine primitive: token
+Two generations of kernels live here (DESIGN.md §4):
+
+* **row-wise** (`gather_rows` / `scatter_rows`) — the seed kernels: one
+  grid step per row, the row choice riding in the BlockSpec ``index_map``.
+  Kept as the benchmark baseline and the fallback for exotic shapes.
+* **blocked** (`gather_rows_blocked` / `gather_combine_blocked`) — the
+  IndexPlan-engine kernels (`core/index_plan.py`): the index table is
+  reshaped to ``(nB, br)`` row blocks so each grid step moves ``br`` rows
+  off an HBM-resident source via explicit async copies, with
+
+  - **run detection**: a block whose indices form a contiguous run
+    (``idx[base + r] == idx[base] + r``) collapses to ONE strided block
+    copy — the index-table analogue of the rearrangement planner's axis
+    collapsing, resolved at run time because the table is data;
+  - **in-kernel sentinel masking**: a negative index zero-fills its row
+    (``pl.when``), so callers never concatenate sentinel rows onto the
+    source array;
+  - a **fused gather+weighted-combine** form: ``out[t] = sum_k
+    gates[t, k] * src[back[t, k]]`` in one kernel — the whole MoE combine
+    (gather -> reshape -> multiply -> sum) as a single `pallas_call`.
+
+These kernels are the framework's MoE dispatch/combine primitives: token
 permutation by expert id is precisely an index-set gather (DESIGN.md §4).
 """
 
@@ -21,6 +42,10 @@ from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
 from repro.kernels.tiling import cdiv, force_interpret, plan_copy_tiles
+
+# ---------------------------------------------------------------------------
+# row-wise kernels (seed generation; benchmark baseline)
+# ---------------------------------------------------------------------------
 
 
 def _copy_row_kernel(idx_ref, x_ref, o_ref):
@@ -36,7 +61,12 @@ def gather_rows(
     block_c: int | None = None,
     interpret: bool | None = None,
 ) -> jax.Array:
-    """out[i, :] = x[idx[i], :].  idx: int32 (num_out,)."""
+    """out[i, :] = x[idx[i], :].  idx: int32 (num_out,).
+
+    Row-wise seed kernel: one grid step (one DMA) per output row, the
+    source row riding in the input BlockSpec ``index_map``.  The blocked
+    generation (:func:`gather_rows_blocked`) moves ``br`` rows per step.
+    """
     if x.ndim != 2 or idx.ndim != 1:
         raise ValueError(f"gather_rows wants 2-D x and 1-D idx, got {x.shape}, {idx.shape}")
     n_out = idx.shape[0]
@@ -68,7 +98,12 @@ def scatter_rows(
     interpret: bool | None = None,
 ) -> jax.Array:
     """out[idx[i], :] = x[i, :].  ``idx`` must be a permutation of
-    range(x.shape[0]) — every output row is written exactly once."""
+    range(x.shape[0]) — every output row is written exactly once.
+
+    Row-wise seed kernel; the IndexPlan engine executes general (capacity)
+    scatters as a masked blocked gather through the inverted table
+    (`kernels.ops.scatter_rows`).
+    """
     if x.ndim != 2 or idx.ndim != 1 or idx.shape[0] != x.shape[0]:
         raise ValueError(f"scatter_rows wants idx over rows, got {x.shape}, {idx.shape}")
     n = x.shape[0]
@@ -89,3 +124,211 @@ def scatter_rows(
         out_shape=jax.ShapeDtypeStruct((n, C), x.dtype),
         interpret=interpret,
     )(idx.astype(jnp.int32), x)
+
+
+# ---------------------------------------------------------------------------
+# blocked kernels (IndexPlan engine generation)
+# ---------------------------------------------------------------------------
+
+
+def _pad_table(idx: jax.Array, rows: int) -> jax.Array:
+    """Pad the int32 index table to ``rows`` entries with the sentinel -1
+    (no concatenate: a full-sized fill + static-slice update)."""
+    idx = idx.astype(jnp.int32)
+    n = idx.shape[0]
+    if n == rows:
+        return idx
+    return jnp.full((rows,), -1, jnp.int32).at[:n].set(idx)
+
+
+def _row_dma(src_hbm, s, rows_vmem, r, sem):
+    """Copy one source row ``s`` (HBM) into scratch row ``r`` (VMEM)."""
+    cp = pltpu.make_async_copy(
+        src_hbm.at[pl.ds(s, 1), :], rows_vmem.at[pl.ds(r, 1), :], sem
+    )
+    cp.start()
+    cp.wait()
+
+
+def _gather_block_kernel(use_run: bool, idx_ref, x_hbm, o_ref, rows, sem):
+    """One grid step = one (br, C) output block.
+
+    Run detection first: when the block's br indices are a contiguous run,
+    ONE strided block copy fetches all rows; otherwise rows are copied
+    one DMA each, with negative (sentinel) indices zero-filled in VMEM.
+    ``use_run`` is static — False when br > n_src, where a br-row run
+    cannot exist (and the block-copy slice would be statically invalid).
+    """
+    i = pl.program_id(0)
+    br, C = o_ref.shape
+    base = i * br
+    start = idx_ref[base]
+
+    def _row_path(_):
+        def body(r, carry):
+            s = idx_ref[base + r]
+
+            @pl.when(s >= 0)
+            def _():
+                _row_dma(x_hbm, s, rows, r, sem)
+
+            @pl.when(s < 0)
+            def _():
+                rows[pl.ds(r, 1), :] = jnp.zeros((1, C), o_ref.dtype)
+
+            return carry
+
+        jax.lax.fori_loop(0, br, body, 0)
+        return 0
+
+    if use_run:
+
+        def _consecutive(r, ok):
+            return jnp.logical_and(ok, idx_ref[base + r] == start + r)
+
+        is_run = jax.lax.fori_loop(1, br, _consecutive, start >= 0)
+
+        def _run_path(_):
+            cp = pltpu.make_async_copy(
+                x_hbm.at[pl.ds(start, br), :], rows.at[:, :], sem
+            )
+            cp.start()
+            cp.wait()
+            return 0
+
+        jax.lax.cond(is_run, _run_path, _row_path, 0)
+    else:
+        _row_path(0)
+    o_ref[...] = rows[...]
+
+
+@functools.partial(jax.jit, static_argnames=("block_r", "interpret"))
+def gather_rows_blocked(
+    x: jax.Array,
+    idx: jax.Array,
+    *,
+    block_r: int = 64,
+    interpret: bool | None = None,
+) -> jax.Array:
+    """Blocked masked gather: ``out[i, :] = x[idx[i], :]``, ``idx[i] < 0``
+    -> zero row.
+
+    The index table is reshaped to ``(nB, block_r)`` row blocks; each grid
+    step moves ``block_r`` full-width rows off the HBM-resident source.
+    Contiguous index runs collapse to one strided block copy (run
+    detection), and sentinel rows are zero-filled in-kernel — no caller-
+    side sentinel-row concatenates.  Planned by
+    :func:`repro.core.index_plan.plan_index_op`.
+    """
+    if x.ndim != 2 or idx.ndim != 1:
+        raise ValueError(
+            f"gather_rows_blocked wants 2-D x and 1-D idx, got {x.shape}, {idx.shape}"
+        )
+    n_out = idx.shape[0]
+    n_src, C = x.shape
+    if n_out == 0 or C == 0 or n_src == 0:
+        return jnp.zeros((n_out, C), x.dtype)
+    br = max(1, min(block_r, n_out))
+    nB = cdiv(n_out, br)
+    idxp = _pad_table(idx, nB * br)
+
+    interpret = force_interpret() if interpret is None else interpret
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=(nB,),
+        in_specs=[pl.BlockSpec(memory_space=pltpu.ANY)],
+        out_specs=pl.BlockSpec((br, C), lambda i, idx_ref: (i, 0)),
+        scratch_shapes=[pltpu.VMEM((br, C), x.dtype), pltpu.SemaphoreType.DMA],
+    )
+    return pl.pallas_call(
+        functools.partial(_gather_block_kernel, br <= n_src),
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((n_out, C), x.dtype),
+        interpret=interpret,
+    )(idxp, x)
+
+
+def _gather_combine_kernel(back_ref, src_hbm, gates_ref, o_ref, rows, sem):
+    """One grid step = one (bt, C) combined-output block.
+
+    Gathers the block's ``bt * k`` source rows into VMEM (sentinels
+    zero-filled), then performs the weighted combine entirely on-chip:
+    ``out[t] = sum_k gates[t, k] * rows[t, k]`` — the gathered (T*k, C)
+    intermediate never exists in HBM.
+    """
+    i = pl.program_id(0)
+    bt, C = o_ref.shape
+    k = gates_ref.shape[1]
+    base = i * bt * k
+
+    def body(j, carry):
+        s = back_ref[base + j]
+
+        @pl.when(s >= 0)
+        def _():
+            _row_dma(src_hbm, s, rows, j, sem)
+
+        @pl.when(s < 0)
+        def _():
+            rows[pl.ds(j, 1), :] = jnp.zeros((1, C), o_ref.dtype)
+
+        return carry
+
+    jax.lax.fori_loop(0, bt * k, body, 0)
+    v = rows[...].reshape(bt, k, C)
+    g = gates_ref[...].astype(o_ref.dtype)
+    o_ref[...] = (v * g[..., None]).sum(axis=1)
+
+
+@functools.partial(jax.jit, static_argnames=("block_t", "interpret"))
+def gather_combine_blocked(
+    src: jax.Array,
+    back: jax.Array,
+    gates: jax.Array,
+    *,
+    block_t: int = 32,
+    interpret: bool | None = None,
+) -> jax.Array:
+    """Fused gather + weighted combine (the MoE combine primitive):
+
+        out[t, :] = sum_k gates[t, k] * src[back[t, k], :]
+
+    with ``back[t, k] < 0`` contributing zero.  ``src``: (n_src, C);
+    ``back``: int (T, k); ``gates``: (T, k) float.  ONE `pallas_call`
+    replaces the seed's gather -> reshape -> multiply -> sum chain, and
+    the (T*k, C) gathered intermediate never round-trips HBM.  The
+    per-``k`` accumulation order and dtype match the unfused chain
+    (products and sum in ``src.dtype``), so results are bit-identical to
+    the seed path.  Planned by :func:`repro.core.index_plan.plan_index_op`
+    with ``semantics="gather_combine"``.
+    """
+    if src.ndim != 2 or back.ndim != 2 or gates.shape != back.shape:
+        raise ValueError(
+            f"gather_combine_blocked wants 2-D src and matching (T, k) "
+            f"back/gates, got {src.shape}, {back.shape}, {gates.shape}"
+        )
+    T, k = back.shape
+    n_src, C = src.shape
+    if T == 0 or C == 0 or k == 0 or n_src == 0:
+        return jnp.zeros((T, C), src.dtype)
+    bt = max(1, min(block_t, T))
+    nT = cdiv(T, bt)
+    backp = _pad_table(back.reshape(-1), nT * bt * k)
+
+    interpret = force_interpret() if interpret is None else interpret
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=(nT,),
+        in_specs=[
+            pl.BlockSpec(memory_space=pltpu.ANY),
+            pl.BlockSpec((bt, k), lambda i, back_ref: (i, 0)),
+        ],
+        out_specs=pl.BlockSpec((bt, C), lambda i, back_ref: (i, 0)),
+        scratch_shapes=[pltpu.VMEM((bt * k, C), src.dtype), pltpu.SemaphoreType.DMA],
+    )
+    return pl.pallas_call(
+        _gather_combine_kernel,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((T, C), src.dtype),
+        interpret=interpret,
+    )(backp, src, gates)

@@ -25,6 +25,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.core.index_plan import IndexPlan, plan_index_op
 from repro.core.plan import RearrangePlan, plan_rearrange
 from repro.kernels import (
     copy as copy_k,
@@ -79,22 +80,108 @@ def copy_range(x: Array, start, size: int) -> Array:
     return ref.copy_range(x, start, size)
 
 
-def gather_rows(x: Array, idx: Array) -> Array:
-    """Index-set access: rows of ``x`` (axis 0) selected by ``idx``."""
+def apply_index_plan(
+    x: Array, idx: Array, plan: IndexPlan, gates: Array | None = None
+) -> Array:
+    """Execute an :class:`IndexPlan` on ``x`` with the blocked kernels.
+
+    Every route is at most ONE kernel invocation over HBM:
+
+      noop           -> zeros (empty table / empty rows), no kernel
+      gather         -> blocked masked gather (run-detected block copies)
+      scatter        -> the same gather through the inverted index table
+                        (an int32 table op; unmapped rows stay zero)
+      gather_combine -> fused gather + weighted combine (needs ``gates``)
+    """
+    interp = _interpret()
+    if plan.mode == "noop":
+        return jnp.zeros((plan.n_out, x.shape[1]), x.dtype)
+    if plan.semantics == "scatter":
+        inv = jnp.full((plan.n_out,), -1, jnp.int32).at[idx].set(
+            jnp.arange(plan.n_src, dtype=jnp.int32), mode="drop"
+        )
+        return gs_k.gather_rows_blocked(
+            x, inv, block_r=plan.block_rows, interpret=interp
+        )
+    if plan.semantics == "gather_combine":
+        if gates is None:
+            raise ValueError("gather_combine plans need the gates operand")
+        return gs_k.gather_combine_blocked(
+            x, idx, gates, block_t=plan.block_rows, interpret=interp
+        )
+    return gs_k.gather_rows_blocked(x, idx, block_r=plan.block_rows, interpret=interp)
+
+
+def gather_rows(x: Array, idx: Array, *, masked: bool = False, engine: str = "plan") -> Array:
+    """Index-set access: rows of ``x`` (axis 0) selected by ``idx``.
+
+    ``masked=True`` enables sentinel semantics (``idx[i] < 0`` -> zero
+    row).  ``engine="plan"`` (default) routes through the IndexPlan engine
+    (blocked kernel, `core/index_plan.py`); ``engine="rowwise"`` keeps the
+    seed one-row-per-grid-step kernel (benchmark baseline, unmasked only).
+    """
+    if engine not in ("plan", "rowwise"):
+        raise ValueError(f"unknown gather_rows engine {engine!r}")
+    if engine == "rowwise" and masked:
+        raise ValueError("the rowwise engine has no sentinel masking")
     if use_pallas() and x.ndim == 2:
-        return gs_k.gather_rows(x, idx, interpret=_interpret())
+        if engine == "rowwise":
+            return gs_k.gather_rows(x, idx, interpret=_interpret())
+        plan = plan_index_op(x.shape, x.dtype, idx.shape[0], "gather", masked=masked)
+        return apply_index_plan(x, idx, plan)
+    if masked:
+        return ref.gather_rows_masked(x, idx)
     return ref.gather_rows(x, idx)
 
 
 def scatter_rows(x: Array, idx: Array, num_out: int | None = None) -> Array:
-    """Permutation scatter: ``out[idx[i]] = x[i]`` (idx injective)."""
-    if (
-        use_pallas()
-        and x.ndim == 2
-        and (num_out is None or num_out == x.shape[0])
-    ):
-        return gs_k.scatter_rows(x, idx, interpret=_interpret())
+    """Injective row scatter: ``out[idx[i], :] = x[i, :]``.
+
+    Contract (explicit — the seed version fell back silently):
+
+    * ``idx`` must be injective into ``[0, num_out)``.  Duplicate targets
+      leave the duplicated row unspecified (this cannot be validated
+      eagerly on traced values); out-of-range targets are dropped.
+    * ``num_out`` defaults to ``x.shape[0]`` (permutation scatter).
+      ``num_out > x.shape[0]`` is the capacity-scatter case (rows nothing
+      maps to — dropped slots — are zero-filled); it routes to the masked
+      blocked kernel through the inverted table, the same fast path as the
+      permutation case.
+    * ``num_out < x.shape[0]`` cannot be injective: raises eagerly.
+    * Non-2-D ``x`` has no Pallas fast path and dispatches to the oracle.
+    """
+    if idx.ndim != 1 or idx.shape[0] != x.shape[0]:
+        raise ValueError(
+            f"scatter_rows wants 1-D idx over x rows, got {x.shape}, {idx.shape}"
+        )
+    if num_out is not None and num_out < x.shape[0]:
+        raise ValueError(
+            f"scatter_rows num_out={num_out} < {x.shape[0]} rows cannot be injective"
+        )
+    n_out = x.shape[0] if num_out is None else num_out
+    if use_pallas() and x.ndim == 2:
+        plan = plan_index_op(x.shape, x.dtype, n_out, "scatter", masked=True)
+        return apply_index_plan(x, idx, plan)
     return ref.scatter_rows(x, idx, num_out)
+
+
+def gather_combine(src: Array, back: Array, gates: Array) -> Array:
+    """Fused gather + weighted combine (the MoE combine primitive):
+    ``out[t] = sum_k gates[t, k] * src[back[t, k]]``, with negative
+    ``back`` entries contributing zero.  ONE `pallas_call` on the Pallas
+    path (no (T*k, C) gathered intermediate in HBM)."""
+    if back.ndim != 2 or gates.shape != back.shape:
+        raise ValueError(
+            f"gather_combine wants matching (T, k) back/gates, got "
+            f"{back.shape}, {gates.shape}"
+        )
+    if use_pallas() and src.ndim == 2:
+        plan = plan_index_op(
+            src.shape, src.dtype, back.shape[0], "gather_combine",
+            masked=True, top_k=back.shape[1],
+        )
+        return apply_index_plan(src, back, plan, gates=gates)
+    return ref.gather_combine(src, back, gates)
 
 
 def transpose2d_batched(x: Array, *, diagonal: bool = False) -> Array:

@@ -42,12 +42,35 @@ def gather_rows(x: Array, idx: Array) -> Array:
     return jnp.take(x, idx, axis=0)
 
 
+def gather_rows_masked(x: Array, idx: Array) -> Array:
+    """Sentinel-aware index-set access: ``out[i] = x[idx[i]]`` with
+    ``idx[i] < 0`` producing a zero row (the in-kernel masking semantics
+    of the blocked gather, DESIGN.md §4)."""
+    if x.shape[0] == 0:
+        return jnp.zeros((idx.shape[0],) + x.shape[1:], x.dtype)
+    safe = jnp.clip(idx, 0, x.shape[0] - 1)
+    rows = jnp.take(x, safe, axis=0)
+    mask = (idx >= 0).reshape((-1,) + (1,) * (x.ndim - 1))
+    return jnp.where(mask, rows, jnp.zeros((), x.dtype))
+
+
 def scatter_rows(x: Array, idx: Array, num_out: int | None = None) -> Array:
     """Permutation scatter: ``out[idx[i]] = x[i]``.  ``idx`` must be a
     permutation (or injective into ``num_out`` rows)."""
     n = x.shape[0] if num_out is None else num_out
     out = jnp.zeros((n,) + x.shape[1:], x.dtype)
-    return out.at[idx].set(x)
+    return out.at[idx].set(x, mode="drop")
+
+
+def gather_combine(src: Array, back: Array, gates: Array) -> Array:
+    """Fused gather + weighted combine oracle:
+    ``out[t] = sum_k gates[t, k] * src[back[t, k]]``; ``back[t, k] < 0``
+    contributes zero.  Ground truth for
+    `gather_scatter.gather_combine_blocked` (products and the k-sum run in
+    ``src.dtype``, matching the unfused gather->multiply->sum chain)."""
+    t, k = back.shape
+    rows = gather_rows_masked(src, back.reshape(-1)).reshape(t, k, src.shape[1])
+    return (rows * gates.astype(rows.dtype)[..., None]).sum(axis=1)
 
 
 # ---------------------------------------------------------------------------

@@ -50,6 +50,12 @@ OUT_DIR = Path(os.environ.get("REPRO_DRYRUN_DIR", "runs/dryrun"))
 TRAIN_ACCUM = int(os.environ.get("REPRO_DRYRUN_ACCUM", "8"))
 
 
+def _cost_dict(compiled) -> dict:
+    """``Compiled.cost_analysis()`` as a dict (jax 0.4.x returns [dict])."""
+    cost = compiled.cost_analysis()
+    return cost[0] if isinstance(cost, list) else cost
+
+
 def lower_cell(cfg, cell, mesh, *, accum_steps: int = 1):
     step = specs.make_step(cfg, cell, mesh, adamw.OptConfig(), accum_steps=accum_steps)
     inputs = specs.input_specs(cfg, cell)
@@ -57,7 +63,7 @@ def lower_cell(cfg, cell, mesh, *, accum_steps: int = 1):
     pshard = specs.param_shardings(cfg, mesh)
     params_abs = tf.abstract_params(cfg)
 
-    with jax.sharding.set_mesh(mesh):
+    with meshlib.set_mesh_compat(mesh):
         if cell.kind == "train":
             oshard = specs.opt_shardings(cfg, mesh)
             opt_abs = jax.eval_shape(adamw.init, params_abs)
@@ -93,7 +99,7 @@ def _reduced(cfg, stage_counts, enc_layers):
 def _cost_triple(cfg, cell, mesh) -> np.ndarray:
     lowered = lower_cell(cfg, cell, mesh, accum_steps=1)
     compiled = lowered.compile()
-    cost = compiled.cost_analysis()
+    cost = _cost_dict(compiled)
     coll = hlolib.collective_stats(compiled.as_text())
     return np.array(
         [
@@ -212,7 +218,7 @@ def run_cell(arch: str, cell_name: str, multi_pod: bool, *, force: bool = False,
         compiled = lowered.compile()
         t1 = time.time()
         mem = compiled.memory_analysis()
-        cost = compiled.cost_analysis()
+        cost = _cost_dict(compiled)
         rec.update(
             status="ok",
             compile_s=round(t1 - t0, 1),

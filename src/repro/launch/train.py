@@ -55,7 +55,7 @@ def main() -> None:
     oc = adamw.OptConfig(lr=args.lr, total_steps=args.steps, warmup_steps=max(1, args.steps // 20))
 
     key = jax.random.PRNGKey(args.seed)
-    with jax.sharding.set_mesh(mesh):
+    with meshlib.set_mesh_compat(mesh):
         params = init_sharded(cfg, key, mesh)
         opt_state = adamw.init(params)
         step_fn = jax.jit(

@@ -2,10 +2,11 @@
 
 Dispatch IS the paper's index-set rearrangement (§III-A / DESIGN.md §4):
 
-* ``sort`` mode — tokens are permuted into expert-contiguous order with the
-  library's gather kernel (`kernels.gather_scatter.gather_rows`, scalar-
-  prefetched index table = constant-memory analogue), experts run as a
-  blocked einsum, and the inverse permutation restores order.  This is the
+* ``sort`` mode — tokens are permuted into expert-contiguous order through
+  the IndexPlan engine (`core/index_plan.py`): ONE blocked masked gather
+  (scalar-prefetched index table = constant-memory analogue, sentinel
+  slots zero-filled in-kernel), experts run as a blocked einsum, and ONE
+  fused gather+weighted-combine kernel restores token order.  This is the
   TPU-kernel path (single device / serving).
 * ``dense`` mode — capacity-bucketed one-hot dispatch/combine einsums
   (the GSPMD-canonical formulation): expert axis sharded on 'model' turns
@@ -131,11 +132,25 @@ def moe_dense(p: dict, cfg, x: Array, *, capacity: int | None = None) -> tuple[A
     return x + y.reshape(b0, s0, d), aux
 
 
-def moe_sort(p: dict, cfg, x: Array, *, capacity: int | None = None) -> tuple[Array, Array]:
+def moe_sort(
+    p: dict, cfg, x: Array, *, capacity: int | None = None, engine: str = "plan"
+) -> tuple[Array, Array]:
     """Capacity-blocked gather dispatch through the library's index-set
     kernels (paper §III-A): tokens are gathered into expert-contiguous
     (E, C, D) blocks with a scalar-prefetched source table, experts run as
-    blocked einsums, and a second gather restores token order."""
+    blocked einsums, and the combine restores token order.
+
+    ``engine="plan"`` (default) routes through the IndexPlan engine
+    (`core/index_plan.py`): dispatch is ONE blocked masked gather (dropped
+    slots are in-kernel sentinel zeros — no sentinel-row concatenates) and
+    the combine is ONE fused gather+weighted-combine kernel, so the whole
+    dispatch+combine is exactly 2 `pallas_call`s.  ``engine="rowwise"``
+    keeps the seed path — per-row gathers around two full-array sentinel
+    concatenates and an unfused multiply/sum combine — as the benchmark
+    baseline (`benchmarks/bench_moe_dispatch.py`).
+    """
+    if engine not in ("plan", "rowwise"):
+        raise ValueError(f"unknown moe_sort engine {engine!r}")
     mc = cfg.moe
     b, s, d = x.shape
     h = common.apply_norm(cfg.norm, p["norm"], x)
@@ -150,20 +165,36 @@ def moe_sort(p: dict, cfg, x: Array, *, capacity: int | None = None) -> tuple[Ar
     pos = jnp.cumsum(flat, axis=0) - flat
     pos = (pos * flat).sum(-1).reshape(t, k)                   # rank in expert
     keep = pos < cap
-
     slot = idx * cap + pos                                     # (T, k) in [0, E*C)
-    slot_or_dump = jnp.where(keep, slot, e * cap).reshape(-1)  # dump slot at end
     token_of = jnp.arange(t * k, dtype=jnp.int32) // k
-    # source table: slot -> source token row (sentinel row t = zeros)
-    src = jnp.full((e * cap + 1,), t, jnp.int32).at[slot_or_dump].set(token_of)
-    h2p = jnp.concatenate([h2, jnp.zeros((1, d), h2.dtype)], axis=0)
-    xs = ops.gather_rows(h2p, src[: e * cap])                  # (E*C, D) gather kernel
-    ye = _expert_ffn(p, cfg, xs.reshape(e, cap, d)).reshape(e * cap, d)
-    # gather back: token slot -> expert output row (dump -> zeros row)
-    yep = jnp.concatenate([ye, jnp.zeros((1, d), ye.dtype)], axis=0)
-    back = jnp.where(keep.reshape(-1), slot.reshape(-1), e * cap).astype(jnp.int32)
-    yk = ops.gather_rows(yep, back).reshape(t, k, d)
-    y = (yk * gates[..., None].astype(yk.dtype)).sum(axis=1).astype(x.dtype)
+
+    if engine == "rowwise":
+        slot_or_dump = jnp.where(keep, slot, e * cap).reshape(-1)  # dump at end
+        # source table: slot -> source token row (sentinel row t = zeros)
+        src = jnp.full((e * cap + 1,), t, jnp.int32).at[slot_or_dump].set(token_of)
+        h2p = jnp.concatenate([h2, jnp.zeros((1, d), h2.dtype)], axis=0)
+        xs = ops.gather_rows(h2p, src[: e * cap], engine="rowwise")
+        ye = _expert_ffn(p, cfg, xs.reshape(e, cap, d)).reshape(e * cap, d)
+        # gather back: token slot -> expert output row (dump -> zeros row)
+        yep = jnp.concatenate([ye, jnp.zeros((1, d), ye.dtype)], axis=0)
+        back = jnp.where(keep.reshape(-1), slot.reshape(-1), e * cap).astype(jnp.int32)
+        yk = ops.gather_rows(yep, back, engine="rowwise").reshape(t, k, d)
+        y = (yk * gates[..., None].astype(yk.dtype)).sum(axis=1).astype(x.dtype)
+    else:
+        # dispatch: slot -> token table with -1 sentinels for empty slots
+        # (dropped assignments target the out-of-range slot e*cap and are
+        # dropped by the scatter); the masked blocked gather zero-fills
+        # sentinel rows in-kernel -> ONE pallas_call, no h2 concatenate.
+        slot_or_dump = jnp.where(keep, slot, e * cap).reshape(-1)
+        src = jnp.full((e * cap,), -1, jnp.int32).at[slot_or_dump].set(
+            token_of, mode="drop"
+        )
+        xs = ops.gather_rows(h2, src, masked=True)             # (E*C, D)
+        ye = _expert_ffn(p, cfg, xs.reshape(e, cap, d)).reshape(e * cap, d)
+        # combine: out[t] = sum_k gates[t,k] * ye[back[t,k]] fused into ONE
+        # kernel (dropped assignments carry the -1 sentinel -> zero term)
+        back = jnp.where(keep, slot, -1).astype(jnp.int32)     # (T, k)
+        y = ops.gather_combine(ye, back, gates).astype(x.dtype)
     if "shared" in p:
         y = y + mlp.ffn_only(p["shared"], cfg, h2)
     return x + y.reshape(b, s, d), aux
@@ -176,5 +207,10 @@ def moe_apply(p: dict, cfg, x: Array, *, capacity: int | None = None) -> tuple[A
 
 
 def decode_capacity(cfg, batch: int) -> int:
-    """Lossless capacity for decode: worst case all tokens -> one expert."""
-    return batch * cfg.moe.top_k
+    """Lossless per-expert capacity for a decode step: worst case every
+    token routes to the same expert.  ``jax.lax.top_k`` expert ids are
+    distinct per token, so one expert receives at most ONE assignment per
+    token — capacity ``batch`` is lossless.  (The seed returned
+    ``batch * top_k``, sizing the decode dispatch gather k times too big.)
+    """
+    return batch

@@ -26,6 +26,8 @@ import jax.numpy as jnp
 import numpy as np
 from jax.sharding import PartitionSpec as P
 
+from repro.launch.mesh import axis_size_compat, shard_map_compat
+
 
 def _quant(x: jax.Array) -> tuple[jax.Array, jax.Array]:
     scale = jnp.max(jnp.abs(x)) / 127.0 + 1e-12
@@ -40,7 +42,7 @@ def _dequant(q: jax.Array, scale: jax.Array) -> jax.Array:
 def ring_allreduce_int8(x: jax.Array, axis_name: str) -> jax.Array:
     """Mean-all-reduce of ``x`` over ``axis_name`` with int8 ring hops.
     Call inside shard_map.  x: flat (L,) with L % n == 0."""
-    n = jax.lax.axis_size(axis_name)
+    n = axis_size_compat(axis_name)
     me = jax.lax.axis_index(axis_name)
     fwd = [(i, (i + 1) % n) for i in range(n)]
     chunks = x.reshape(n, -1).astype(jnp.float32)
@@ -83,12 +85,11 @@ def compressed_allreduce_mean(tree, mesh, *, axis: str = "data"):
         pad = (-flat.size) % n
         flat = jnp.pad(flat, (0, pad))
 
-        fn = jax.shard_map(
+        fn = shard_map_compat(
             functools.partial(ring_allreduce_int8, axis_name=axis),
-            mesh=mesh,
-            in_specs=P(),
-            out_specs=P(),
-            check_vma=False,
+            mesh,
+            P(),
+            P(),
         )
         red = fn(flat)
         return red[: leaf.size].reshape(leaf.shape).astype(leaf.dtype)
