@@ -5,8 +5,13 @@
 #   make test-interpret  kernel/engine suites with every op forced through
 #                        the Pallas interpreter (REPRO_PALLAS_INTERPRET=1)
 #   make bench           benchmark harness; writes BENCH_rearrange.json
-#                        (+ BENCH_stencil.json / BENCH_moe.json)
+#                        (+ BENCH_stencil.json / BENCH_moe.json / BENCH_dist.json)
 #   make bench-moe       MoE dispatch suite only; writes BENCH_moe.json
+#   make bench-dist      mesh-aware suite only (8 forced host devices in a
+#                        subprocess); writes BENCH_dist.json
+#   make test-dist       distributed plan-engine suite directly on 8 forced
+#                        host devices (the tier-1 run covers the same thing
+#                        through a subprocess launcher test)
 #   make lint            byte-compile + import sanity (no external linters
 #                        are installed in the container)
 #
@@ -18,7 +23,7 @@
 
 PYTHONPATH := src
 
-.PHONY: test test-interpret bench bench-moe lint check docs-check
+.PHONY: test test-interpret test-dist bench bench-moe bench-dist lint check docs-check
 
 docs-check:
 	python tools/check_docstrings.py
@@ -36,6 +41,13 @@ bench:
 
 bench-moe:
 	PYTHONPATH=$(PYTHONPATH) python -m benchmarks.run --only moe_dispatch --json ''
+
+bench-dist:
+	PYTHONPATH=$(PYTHONPATH) python -m benchmarks.run --only dist --json ''
+
+test-dist:
+	XLA_FLAGS=--xla_force_host_platform_device_count=8 REPRO_DIST_CHILD=1 \
+		PYTHONPATH=$(PYTHONPATH) python -m pytest -x -q tests/test_dist_plan.py
 
 lint:
 	python -m compileall -q src tests benchmarks examples

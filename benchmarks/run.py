@@ -8,8 +8,10 @@ machine-readable record stream to ``BENCH_rearrange.json`` (op name,
 achieved GB/s, fraction of memcpy, plan mode) so the perf trajectory is
 tracked across PRs.  The stencil suite's rows (fused vs per-sweep plan
 engine comparison) are additionally written to ``BENCH_stencil.json``,
-and the MoE dispatch suite's rows (dense vs rowwise-sort vs fused-sort
-IndexPlan comparison) to ``BENCH_moe.json``.
+the MoE dispatch suite's rows (dense vs rowwise-sort vs fused-sort
+IndexPlan comparison) to ``BENCH_moe.json``, and the mesh-aware suite's
+rows (DistPlan strategies with bytes-on-wire accounting, run on 8 forced
+host devices in a subprocess) to ``BENCH_dist.json``.
 """
 
 from __future__ import annotations
@@ -28,6 +30,7 @@ SUITES = [
     ("interlace", "benchmarks.bench_interlace", "Table 3 interlace/deinterlace"),
     ("stencil", "benchmarks.bench_stencil", "Fig. 2/Table 4 2D FD stencil"),
     ("moe_dispatch", "benchmarks.bench_moe_dispatch", "beyond-paper MoE dispatch"),
+    ("dist", "benchmarks.bench_dist", "beyond-paper mesh-aware engines (8 fake devices)"),
     ("roofline", "benchmarks.bench_roofline", "dry-run roofline table"),
 ]
 
@@ -47,6 +50,11 @@ def main() -> None:
         "--json-moe",
         default="BENCH_moe.json",
         help="output path for the MoE dispatch suite's plan-engine rows",
+    )
+    ap.add_argument(
+        "--json-dist",
+        default="BENCH_dist.json",
+        help="output path for the mesh-aware suite's strategy-comparison rows",
     )
     args = ap.parse_args()
     only = set(args.only.split(",")) if args.only else None
@@ -81,7 +89,11 @@ def main() -> None:
         print(f"# wrote {args.json} ({len(common.RECORDS)} rows)", flush=True)
 
     # per-engine comparisons get their own tracked artifacts
-    for suite, path in (("stencil", args.json_stencil), ("moe_dispatch", args.json_moe)):
+    for suite, path in (
+        ("stencil", args.json_stencil),
+        ("moe_dispatch", args.json_moe),
+        ("dist", args.json_dist),
+    ):
         suite_rows = [r for r in common.RECORDS if r.get("suite") == suite]
         if suite_rows and path:
             with open(path, "w") as f:

@@ -1,5 +1,19 @@
 """Batched serving example: continuous batching over fixed decode slots.
 
+Where each serving stage lowers through the plan engines:
+
+* **prefill** — `split_heads`/`merge_heads` inside every attention block
+  route through the rearrangement planner (`core/plan.py`, DESIGN.md §3):
+  each is ONE batched-transpose kernel with the framing reshapes folded
+  away; the prefill→decode cache relayout (`kv_cache_to_decode_layout`)
+  is the same §3 adjacent-swap plan.
+* **decode** — slot compaction when requests retire gathers live rows by
+  index, i.e. the index-set engine (`core/index_plan.py`, §4): a blocked
+  masked gather, with freed slots as `-1` sentinels.
+* **MoE archs** — dispatch/combine is the §4 two-kernel sort path
+  (`models/moe.py`); on a mesh, the expert-parallel variant
+  (`moe_sort_ep`) wraps the same kernels in the §10 distributed planner.
+
   PYTHONPATH=src python examples/serve_batch.py
 """
 

@@ -1,6 +1,19 @@
 """End-to-end driver: train a ~117M-parameter dense LM for a few hundred
 steps on synthetic data (deliverable (b) e2e example).
 
+Where each training stage lowers through the plan engines:
+
+* **attention** — `split_heads` (B,S,H·D)→(B,H,S,D) and its inverse are
+  §3 rearrangement plans (`core/plan.py`): ONE V-deep batched-transpose
+  kernel each, cached on (shape, dtype, perm) so steps after the first
+  pay zero planning overhead.
+* **data pipeline** — sequence packing selects rows by index table, the
+  §4 index-set engine's blocked gather (`core/index_plan.py`).
+* **on a mesh** (`--mesh production`) — parameter/batch sharding comes
+  from `sharding/partition.py`; any resharding between layouts is what
+  the §10 distributed planner (`core/dist_plan.py`) prices as
+  local / all_to_all / replicate before falling back to XLA's choice.
+
   PYTHONPATH=src python examples/train_lm.py --steps 300 --batch 4 --seq 128
 """
 

@@ -1,12 +1,14 @@
 """The paper's primary contribution: a composable data-rearrangement
-library — layout algebra, movement planner, rearrange API, stencil API.
+library — layout algebra, movement planner, rearrange API, stencil API,
+and the mesh-level distributed planner on top of them.
 
 Public surface::
 
-    from repro.core import rearrange, stencil, layout, plan
+    from repro.core import rearrange, stencil, layout, plan, dist_plan
     rearrange.permute / permute_order / reorder / interlace / deinterlace
     rearrange.split_heads / merge_heads / space_to_depth / ...
     stencil.Stencil / fd_laplacian / apply_functor / conv1d_depthwise
+    dist_plan.shard_permute / shard_interlace / StencilProgram.shard
 """
 
-from repro.core import layout, plan, rearrange, stencil  # noqa: F401
+from repro.core import dist_plan, layout, plan, rearrange, stencil  # noqa: F401

@@ -270,6 +270,26 @@ class StencilProgram:
         """
         return plan_stencil(shape, dtype, self.stages, boundary, has_aux)
 
+    def shard(self, x: Array, *, mesh, axis: str, boundary: str = "zero") -> Array:
+        """Run the program on a row-sharded grid with halo exchange.
+
+        ``x`` is sharded ``P(axis, None)`` on ``mesh``; the distributed
+        planner (`core/dist_plan.py`, DESIGN.md §10) partitions the program
+        into k-blocks, swaps ``sum(radius_i)`` edge rows with the two mesh
+        neighbors per block (one ``ppermute`` pair), and runs each block as
+        ONE fused §9 kernel per shard.  Bit-identical to
+        ``self(x, boundary=...)`` on a single device.
+
+        Example::
+
+            y = jacobi.repeat(8).shard(x, mesh=mesh, axis="data")
+        """
+        from repro.core import dist_plan
+
+        return dist_plan.shard_stencil(
+            self, x, mesh=mesh, axis=axis, boundary=boundary
+        )
+
     def __call__(
         self, x: Array, *, boundary: str = "zero", aux: Array | None = None
     ) -> Array:

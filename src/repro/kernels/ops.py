@@ -368,6 +368,7 @@ def stencil_program(
     block_rows: int | None = None,
     aux: Array | None = None,
     fused: bool = True,
+    window: tuple | None = None,
 ) -> Array:
     """Execute a compiled stencil program (tuple of (functor, radius)
     stages — see ``core.stencil.StencilPlan.stages_exec``).
@@ -375,7 +376,17 @@ def stencil_program(
     Fused temporal-blocking kernel on the Pallas path; per-sweep oracle
     sweeps otherwise (or when the planner routed the program to the
     reference path, ``fused=False``).
+
+    ``window=(row0, global_rows)`` runs the program in global-row-window
+    mode (§10 halo exchange): ``x`` is a halo-extended shard whose row 0
+    sits at global row ``row0`` (may be traced) of a ``global_rows``-row
+    grid.  Boundary conditions then fire at the true grid edges and the
+    caller crops the contaminated apron.  ``aux`` is a single-device-only
+    feature and cannot be combined with ``window``.
     """
+    if window is not None and aux is not None:
+        raise ValueError("window mode does not support aux operands")
+    row0, global_rows = (None, None) if window is None else window
     if fused and use_pallas() and x.size:
         try:
             return st_k.stencil2d_pipeline(
@@ -384,8 +395,15 @@ def stencil_program(
                 boundary=boundary,
                 aux=aux,
                 block_rows=block_rows,
+                row0=row0,
+                global_rows=global_rows,
+                halo_resident=window is not None,
                 interpret=_interpret(),
             )
         except ValueError:
             pass  # shape constraints changed underfoot: oracle fallback
+    if window is not None:
+        return ref.stencil_pipeline_window(
+            x, stages, boundary=boundary, row0=row0, global_rows=global_rows
+        )
     return ref.stencil_pipeline(x, stages, boundary=boundary, aux=aux)

@@ -242,6 +242,66 @@ def stencil_pipeline(
     return x
 
 
+def stencil_pipeline_window(
+    x: Array,
+    stages: Sequence[tuple[Callable[..., Array], int]],
+    *,
+    boundary: str = "zero",
+    row0: Array | int = 0,
+    global_rows: int | None = None,
+) -> Array:
+    """Oracle for a stencil program on a *window* of a larger global grid
+    (the §10 halo-exchange semantics, mirrored from the fused kernel's
+    ``row0``/``global_rows`` mode).
+
+    ``x`` holds rows ``[row0, row0 + x.shape[0])`` of a ``global_rows``-row
+    grid (``row0`` may be traced — it is ``axis_index * rows_per_shard``
+    under `shard_map`); columns are complete.  Each stage re-extends the
+    row boundary *in global coordinates*: rows outside the global domain
+    are rebuilt from in-domain rows per the boundary mode (periodic rows
+    are already resident — the ring exchange delivered them), then the
+    stage sweeps with the true column boundary.  Rows whose dependency cone
+    leaves the window come out contaminated and must be cropped by the
+    caller (``sum(radius_i)`` rows per side — `core/dist_plan.py` does).
+    """
+    if boundary not in BOUNDARY_PAD_MODES:
+        raise ValueError(
+            f"unknown boundary {boundary!r}; want one of {sorted(BOUNDARY_PAD_MODES)}"
+        )
+    h_ext, w = x.shape
+    hg = h_ext if global_rows is None else int(global_rows)
+    g = jnp.asarray(row0, jnp.int32) + jnp.arange(h_ext, dtype=jnp.int32)
+    for functor, r in stages:
+        if boundary == "periodic" or hg <= 0:
+            cur = x
+        elif boundary == "zero":
+            inside = (g >= 0) & (g < hg)
+            cur = jnp.where(inside[:, None], x, jnp.zeros((), x.dtype))
+        else:
+            if boundary == "reflect" and hg > 1:
+                p = 2 * hg - 2
+                m = g % p
+                src = jnp.where(m < hg, m, p - m)
+            else:  # nearest / clamp (and reflect on a 1-row grid)
+                src = jnp.clip(g, 0, hg - 1)
+            pos = jnp.clip(src - jnp.asarray(row0, jnp.int32), 0, h_ext - 1)
+            cur = jnp.take(x, pos, axis=0)
+        # rows beyond the window only feed contaminated (cropped) outputs:
+        # a zero row pad is enough.  Columns are complete, so the column
+        # boundary is the true one.
+        xp = jnp.pad(cur, ((r, r), (0, 0)))
+        if r:
+            xp = jnp.pad(xp, ((0, 0), (r, r)), mode=BOUNDARY_PAD_MODES[boundary])
+
+        def shift(dy: int, dx: int, _xp=xp, _r=r) -> Array:
+            if max(abs(dy), abs(dx)) > _r:
+                raise ValueError(f"shift ({dy},{dx}) exceeds radius {_r}")
+            return jax.lax.dynamic_slice(_xp, (_r + dy, _r + dx), (h_ext, w))
+
+        x = functor(shift)
+    return x
+
+
 def fd_stencil_offsets(order: int) -> tuple[list[tuple[int, int]], list[float]]:
     """Central finite-difference Laplacian stencil of a given order
     (paper Fig. 2 runs orders I..IV — half-widths 1..4 along each axis).

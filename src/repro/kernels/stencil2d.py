@@ -157,13 +157,20 @@ def pick_panel(
 
 
 def _pipeline_kernel(
-    stages, boundary, br, rp, H, W, R, has_aux, wrap_local, *refs
+    stages, boundary, br, rp, H, W, R, has_aux, wrap_local, h_glob, has_row0,
+    *refs,
 ):
     i = pl.program_id(0)
     o_ref = refs[-1]
     n_per = 1 if (R == 0 or wrap_local) else 3
     x_refs = refs[:n_per]
-    a_refs = refs[n_per:-1]
+    pos_ref = n_per + (n_per if has_aux else 0)
+    a_refs = refs[n_per:pos_ref] if has_aux else ()
+    # global-row window (§10 halo exchange): row 0 of this array sits at
+    # global row `row0v` of a `h_glob`-row grid, so boundary masks fire at
+    # the TRUE grid edges, not the shard edges.  Single-device calls pass
+    # no row0 operand and h_glob == H — identical arithmetic to before.
+    row0v = refs[pos_ref][0, 0] if has_row0 else 0
 
     def band(rs):
         # assemble the halo'd panel: nominal global rows [i*br - R, (i+1)*br + R)
@@ -184,21 +191,36 @@ def _pipeline_kernel(
     if has_aux and boundary != "periodic":
         # zero OOB aux rows so final-partial-panel garbage (possibly NaN)
         # cannot poison rows that survive the shrink
-        ga = jax.lax.broadcasted_iota(jnp.int32, (br + 2 * R, 1), 0) + i * br - R
-        atile = jnp.where((ga >= 0) & (ga < H), atile, jnp.zeros((), atile.dtype))
+        ea = jax.lax.broadcasted_iota(jnp.int32, (br + 2 * R, 1), 0) + i * br - R
+        ga = ea + row0v
+        a_ok = (ga >= 0) & (ga < h_glob)
+        if has_row0:
+            # window mode: padding rows past the local array can sit inside
+            # the global domain (see the x-path mask below) — zero them too
+            a_ok = a_ok & (ea >= 0) & (ea < H)
+        atile = jnp.where(a_ok, atile, jnp.zeros((), atile.dtype))
 
     h = R
     for functor, r in stages:
         T = br + 2 * h
-        g0 = i * br - h
+        g0 = i * br - h + row0v
         # global row ids of the current band (2-D iota — Mosaic wants >=2-D)
         g = jax.lax.broadcasted_iota(jnp.int32, (T, 1), 0) + g0
         if boundary == "periodic":
             # periodic content is already the wrapped extension (mod index
-            # maps / wrap_local assembly) and stays so under each stage
+            # maps / wrap_local assembly / resident halo rows) and stays so
+            # under each stage
             cur = tile
         else:
-            inside = (g >= 0) & (g < H)
+            inside = (g >= 0) & (g < h_glob)
+            if has_row0:
+                # window mode: rows past the local array (final-partial-panel
+                # padding) can sit INSIDE the global domain, so the global
+                # mask alone would keep their garbage (possibly NaN, which
+                # the regather dot then spreads).  Zero them — everything
+                # depending on them is in the cropped apron.
+                eg = g - row0v
+                inside = inside & (eg >= 0) & (eg < H)
             cur = jnp.where(inside, tile, jnp.zeros((), tile.dtype))
             if boundary != "zero":
                 # re-extend the boundary from in-domain rows: a one-hot
@@ -206,12 +228,12 @@ def _pipeline_kernel(
                 # than this stage needs; those resolve to 0 and are shrunk
                 # away before they can matter).  Panels whose band lies
                 # fully in-domain skip it — the gather would be identity.
-                if boundary == "reflect" and H > 1:
-                    p = 2 * H - 2
+                if boundary == "reflect" and h_glob > 1:
+                    p = 2 * h_glob - 2
                     m = g % p
-                    src = jnp.where(m < H, m, p - m)
+                    src = jnp.where(m < h_glob, m, p - m)
                 else:  # nearest / clamp (and reflect on a 1-row grid)
-                    src = jnp.clip(g, 0, H - 1)
+                    src = jnp.clip(g, 0, h_glob - 1)
                 pos = src - g0
                 cols = jax.lax.broadcasted_iota(jnp.int32, (T, T), 1)
 
@@ -224,7 +246,7 @@ def _pipeline_kernel(
                         preferred_element_type=jnp.float32,
                     ).astype(c.dtype)
 
-                touches_edge = (g0 < 0) | (g0 + T > H)
+                touches_edge = (g0 < 0) | (g0 + T > h_glob)
                 cur = jax.lax.cond(touches_edge, _regather, lambda c: c, cur)
         # column halo: boundary-correct pad of r lanes per side (the full
         # row is resident, so these are static lane shifts — free)
@@ -267,7 +289,11 @@ def _pipeline_kernel(
 
 
 @functools.partial(
-    jax.jit, static_argnames=("stages", "boundary", "block_rows", "interpret")
+    jax.jit,
+    static_argnames=(
+        "stages", "boundary", "block_rows", "global_rows", "halo_resident",
+        "interpret",
+    ),
 )
 def stencil2d_pipeline(
     x: jax.Array,
@@ -276,6 +302,9 @@ def stencil2d_pipeline(
     boundary: str = "zero",
     aux: jax.Array | None = None,
     block_rows: int | None = None,
+    row0: jax.Array | None = None,
+    global_rows: int | None = None,
+    halo_resident: bool = False,
     interpret: bool | None = None,
 ) -> jax.Array:
     """Run a multi-stage stencil program in ONE fused `pallas_call`.
@@ -288,6 +317,16 @@ def stencil2d_pipeline(
     sweeps (`ref.stencil_pipeline`) but with a single HBM round trip via
     temporal blocking: each grid panel loads a ``sum(radius_i)``-row halo
     once, runs every stage in VMEM, and stores once.
+
+    Global-row window (the §10 halo-exchange hook): when ``x`` is a
+    halo-extended shard of a larger grid, ``row0`` (a traced int32 scalar,
+    fed to the kernel as a (1, 1) operand) gives the global row of ``x``'s
+    row 0 and ``global_rows`` the full grid height, so every boundary mask
+    fires at the true grid edges.  ``halo_resident=True`` marks periodic
+    wrap rows as physically present in ``x`` (the ring exchange delivered
+    them), switching periodic to the clamped halo BlockSpecs.  Rows whose
+    dependency cone leaves ``x`` come out contaminated and must be cropped
+    by the caller (the ``sum(radius_i)`` apron — `core/dist_plan.py` does).
     """
     if x.ndim != 2:
         raise ValueError(f"stencil pipeline wants 2-D input, got {x.shape}")
@@ -308,8 +347,14 @@ def stencil2d_pipeline(
     has_aux = aux is not None
     if has_aux and aux.shape != x.shape:
         raise ValueError(f"aux shape {aux.shape} != grid shape {x.shape}")
+    has_row0 = row0 is not None
+    h_glob = H if global_rows is None else int(global_rows)
 
-    br, rp, wrap_local = pick_panel(H, W, x.dtype, R, boundary, block_rows)
+    # resident periodic halos (§10): the wrap rows were delivered by the
+    # ring exchange, so panel geometry and index maps use the clamped
+    # (non-wrapping) family; the kernel's periodic path needs no row masks.
+    geo_boundary = "zero" if (halo_resident and boundary == "periodic") else boundary
+    br, rp, wrap_local = pick_panel(H, W, x.dtype, R, geo_boundary, block_rows)
     nb = cdiv(H, br)
     interpret = force_interpret() if interpret is None else interpret
 
@@ -321,7 +366,7 @@ def stencil2d_pipeline(
     else:
         q = br // rp
         nq = cdiv(H, rp)
-        if boundary == "periodic":
+        if geo_boundary == "periodic":
             below = lambda i: ((i * q - 1) % nq, 0)  # noqa: E731
             above = lambda i: (((i + 1) * q) % nq, 0)  # noqa: E731
         else:
@@ -338,6 +383,10 @@ def stencil2d_pipeline(
     if has_aux:
         operands += [aux] * len(per_input)
         in_specs += list(per_input)
+    if has_row0:
+        # (1, 1) int32 scalar operand, broadcast to every panel
+        operands.append(jnp.asarray(row0, jnp.int32).reshape(1, 1))
+        in_specs.append(pl.BlockSpec((1, 1), lambda i: (0, 0)))
 
     return pl.pallas_call(
         functools.partial(
@@ -351,6 +400,8 @@ def stencil2d_pipeline(
             R,
             has_aux,
             wrap_local,
+            h_glob,
+            has_row0,
         ),
         grid=(nb,),
         in_specs=in_specs,

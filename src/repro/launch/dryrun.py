@@ -1,13 +1,3 @@
-import os
-
-os.environ["XLA_FLAGS"] = (
-    "--xla_force_host_platform_device_count=512 "
-    + os.environ.get("XLA_FLAGS", "")
-)
-# TPU-faithful HLO: keep bf16-in/f32-out dots in the lowering (we only
-# lower+compile here; nothing executes on the CPU backend).
-os.environ.setdefault("REPRO_BF16_DOT", "1")
-
 """Multi-pod dry-run: lower + compile every (arch x shape cell) on the
 production meshes; derive the three-term roofline per cell.
 
@@ -27,6 +17,18 @@ Two lowerings per cell (see EXPERIMENTS.md §Dry-run for why):
 
 Results land in runs/dryrun/<mesh>/<arch>--<cell>.json (resumable).
 """
+
+import os
+
+os.environ["XLA_FLAGS"] = (
+    "--xla_force_host_platform_device_count=512 "
+    + os.environ.get("XLA_FLAGS", "")
+)
+# TPU-faithful HLO: keep bf16-in/f32-out dots in the lowering (we only
+# lower+compile here; nothing executes on the CPU backend).  The 512-device
+# init must precede any jax import, which is why these lines sit above the
+# import block.
+os.environ.setdefault("REPRO_BF16_DOT", "1")
 
 import argparse  # noqa: E402
 import dataclasses  # noqa: E402
@@ -57,6 +59,8 @@ def _cost_dict(compiled) -> dict:
 
 
 def lower_cell(cfg, cell, mesh, *, accum_steps: int = 1):
+    """Lower + compile one (config, shape cell) on ``mesh``; returns the
+    compiled executable (nothing executes — CPU backend, abstract inputs)."""
     step = specs.make_step(cfg, cell, mesh, adamw.OptConfig(), accum_steps=accum_steps)
     inputs = specs.input_specs(cfg, cell)
     in_sh = specs.input_shardings(cfg, cell, mesh)
@@ -185,6 +189,8 @@ def analysis_cost(cfg, cell, mesh) -> dict:
 
 def run_cell(arch: str, cell_name: str, multi_pod: bool, *, force: bool = False,
              analysis: bool = True) -> dict:
+    """Dry-run one cell end to end (lower, compile, roofline) and persist
+    the record to runs/dryrun/ — existing records short-circuit (resume)."""
     mesh_name = "multi" if multi_pod else "single"
     out_path = OUT_DIR / mesh_name / f"{arch}--{cell_name}.json"
     if out_path.exists() and not force:
@@ -260,6 +266,7 @@ def run_cell(arch: str, cell_name: str, multi_pod: bool, *, force: bool = False,
 
 
 def main() -> None:
+    """CLI driver: dry-run every requested (arch, cell, mesh) combination."""
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", default="all")
     ap.add_argument("--cell", default="all")

@@ -18,6 +18,7 @@ from repro.serve.engine import Engine, Request
 
 
 def main() -> None:
+    """CLI driver: synthetic requests through the continuous-batching engine."""
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", default="xlstm-125m-smoke")
     ap.add_argument("--requests", type=int, default=8)

@@ -34,6 +34,7 @@ def _sds(shape, dtype):
 
 
 def train_inputs(cfg: ModelConfig, cell: ShapeCell) -> dict:
+    """Abstract (ShapeDtypeStruct) train-step batch for one shape cell."""
     b, s = cell.global_batch, cell.seq_len
     out = {
         "tokens": _sds((b, s), jnp.int32),
@@ -45,6 +46,7 @@ def train_inputs(cfg: ModelConfig, cell: ShapeCell) -> dict:
 
 
 def prefill_inputs(cfg: ModelConfig, cell: ShapeCell) -> dict:
+    """Abstract prefill-step batch (tokens + optional frontend stream)."""
     b, s = cell.global_batch, cell.seq_len
     out = {"tokens": _sds((b, s), jnp.int32)}
     if cfg.encoder_layers or cfg.n_frontend_tokens:
@@ -53,6 +55,7 @@ def prefill_inputs(cfg: ModelConfig, cell: ShapeCell) -> dict:
 
 
 def decode_inputs(cfg: ModelConfig, cell: ShapeCell) -> dict:
+    """Abstract decode-step batch: one token per row plus the KV cache."""
     b, s = cell.global_batch, cell.seq_len
     cache = jax.eval_shape(lambda: tf.init_cache(cfg, b, s))
     out = {
@@ -68,6 +71,7 @@ def decode_inputs(cfg: ModelConfig, cell: ShapeCell) -> dict:
 
 
 def input_specs(cfg: ModelConfig, cell: ShapeCell) -> dict:
+    """Abstract inputs for any shape-cell kind (train/prefill/decode)."""
     if cell.kind == "train":
         return train_inputs(cfg, cell)
     if cell.kind == "prefill":
@@ -81,6 +85,8 @@ def input_specs(cfg: ModelConfig, cell: ShapeCell) -> dict:
 
 
 def input_shardings(cfg: ModelConfig, cell: ShapeCell, mesh) -> dict:
+    """NamedShardings matching :func:`input_specs`: batch over (pod, data),
+    decode-cache leaves per :func:`partition.cache_leaf_spec`."""
     info = meshlib.mesh_axes_info(mesh)
     baxes = partition.batch_pspec(cell.global_batch, mesh)
     ns = lambda spec: NamedSharding(mesh, spec)
@@ -114,6 +120,7 @@ def input_shardings(cfg: ModelConfig, cell: ShapeCell, mesh) -> dict:
 
 
 def param_shardings(cfg: ModelConfig, mesh) -> Any:
+    """NamedSharding tree for the params (partition rules on this mesh)."""
     info = meshlib.mesh_axes_info(mesh)
     shapes = tf.abstract_params(cfg)
     specs = partition.tree_pspecs(shapes, cfg=cfg, mesh_axes=info)
@@ -121,6 +128,7 @@ def param_shardings(cfg: ModelConfig, mesh) -> Any:
 
 
 def opt_shardings(cfg: ModelConfig, mesh) -> Any:
+    """NamedSharding tree for optimizer state (ZeRO-1 moments)."""
     info = meshlib.mesh_axes_info(mesh)
     shapes = tf.abstract_params(cfg)
     pspecs = partition.tree_pspecs(shapes, cfg=cfg, mesh_axes=info)
@@ -134,12 +142,14 @@ def opt_shardings(cfg: ModelConfig, mesh) -> Any:
 
 
 def make_train_step(cfg: ModelConfig, oc: adamw.OptConfig, mesh, *, accum_steps: int = 1):
+    """The jit-able train step (delegates to ``train.trainer``)."""
     from repro.train import trainer
 
     return trainer.make_train_step(cfg, oc, mesh, accum_steps=accum_steps)
 
 
 def make_prefill_step(cfg: ModelConfig, mesh):
+    """The jit-able prefill step for this config."""
     def prefill_step(params, batch):
         return tf.prefill(
             params, cfg, batch["tokens"], frontend=batch.get("frontend")
@@ -149,6 +159,7 @@ def make_prefill_step(cfg: ModelConfig, mesh):
 
 
 def make_decode_step(cfg: ModelConfig, mesh):
+    """The jit-able single-token decode step for this config."""
     def decode_step(params, batch):
         return tf.decode_step(
             params,
@@ -186,6 +197,8 @@ def resolve_dist(cfg: ModelConfig, mesh, *, serve_decode: bool = False) -> Model
 
 def make_step(cfg: ModelConfig, cell: ShapeCell, mesh, oc: adamw.OptConfig | None = None,
               *, accum_steps: int = 1):
+    """Resolve distribution policies for the mesh and build the cell's step
+    callable (train / prefill / decode)."""
     cfg = resolve_dist(cfg, mesh, serve_decode=cell.kind == "decode")
     if cell.kind == "train":
         return make_train_step(

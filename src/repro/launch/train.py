@@ -30,6 +30,7 @@ from repro.train.trainer import make_train_step
 
 
 def main() -> None:
+    """CLI driver: train on synthetic data with checkpointing + elasticity."""
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", default="xlstm-125m-smoke")
     ap.add_argument("--steps", type=int, default=20)
@@ -112,6 +113,7 @@ def main() -> None:
 
 
 def init_sharded(cfg, key, mesh):
+    """Initialize params directly into their mesh shardings (no host copy)."""
     pshard = specs.param_shardings(cfg, mesh)
     init = jax.jit(
         lambda k: tf.init_params(k, cfg), out_shardings=pshard

@@ -46,19 +46,31 @@ def moe_init(key, cfg) -> dict:
     return p
 
 
-def _router(p: dict, mc, h2: Array) -> tuple[Array, Array, Array]:
-    """h2: (T, D) -> (gates (T,k), idx (T,k), aux_loss)."""
+def _route(p: dict, mc, h2: Array) -> tuple[Array, Array, Array, Array]:
+    """h2: (T, D) -> (gates (T,k), idx (T,k), me (E,), ce (E,)).
+
+    ``me``/``ce`` are the per-expert mean router probability and top-1
+    assignment fraction over THESE tokens — kept separate from the aux-loss
+    reduction so the expert-parallel path can ``pmean`` them across token
+    shards before forming the (nonlinear) Switch loss.
+    """
     logits = (h2.astype(jnp.float32) @ p["w_router"]).astype(jnp.float32)
     probs = jax.nn.softmax(logits, axis=-1)
     gates, idx = jax.lax.top_k(probs, mc.top_k)
     if mc.normalize_gates:
         gates = gates / jnp.maximum(gates.sum(-1, keepdims=True), 1e-9)
-    # Switch aux loss: E * sum_e f_e * P_e
     e = mc.n_experts
     me = probs.mean(axis=0)  # (E,)
     onehot = jax.nn.one_hot(idx[:, 0], e, dtype=jnp.float32)
     ce = onehot.mean(axis=0)
-    aux = e * jnp.sum(me * ce)
+    return gates, idx, me, ce
+
+
+def _router(p: dict, mc, h2: Array) -> tuple[Array, Array, Array]:
+    """h2: (T, D) -> (gates (T,k), idx (T,k), aux_loss)."""
+    gates, idx, me, ce = _route(p, mc, h2)
+    # Switch aux loss: E * sum_e f_e * P_e
+    aux = mc.n_experts * jnp.sum(me * ce)
     return gates, idx, aux
 
 
@@ -68,6 +80,43 @@ def _expert_ffn(p: dict, cfg, xe: Array) -> Array:
     gate = jnp.einsum("ecd,edf->ecf", xe, p["w_gate"])
     hidden = jax.nn.silu(gate) * up if cfg.act == "swiglu" else jax.nn.gelu(up)
     return jnp.einsum("ecf,efd->ecd", hidden, p["w_down"])
+
+
+def _slot_assignment(idx: Array, t: int, e: int, cap: int, k: int):
+    """Capacity-bucketed rank of every (token, k) assignment.
+
+    Returns ``(keep, slot, token_of)``: ``slot = expert*cap + rank`` in
+    ``[0, E*C)``, ``keep`` marks assignments under capacity, ``token_of``
+    maps flat assignment index to its token row.  Shared by BOTH dispatch
+    engines (rowwise baseline and the §4 plan path) so the bucketing
+    semantics cannot diverge between them.
+    """
+    onehot = jax.nn.one_hot(idx, e, dtype=jnp.int32)           # (T, k, E)
+    flat = onehot.reshape(t * k, e)
+    pos = jnp.cumsum(flat, axis=0) - flat
+    pos = (pos * flat).sum(-1).reshape(t, k)                   # rank in expert
+    keep = pos < cap
+    slot = idx * cap + pos                                     # (T, k) in [0, E*C)
+    token_of = jnp.arange(t * k, dtype=jnp.int32) // k
+    return keep, slot, token_of
+
+
+def _dispatch_tables(idx: Array, t: int, e: int, cap: int, k: int):
+    """Sentinel-carrying dispatch tables for the §4 plan path.
+
+    Returns ``(src, back, keep)``: ``src`` (E*cap,) maps each expert slot
+    to its source token row (-1 sentinel = empty slot) and ``back`` (T, k)
+    maps each assignment to its slot (-1 = dropped) — the in-kernel
+    sentinel semantics that make dispatch ONE blocked masked gather and
+    combine ONE fused kernel.
+    """
+    keep, slot, token_of = _slot_assignment(idx, t, e, cap, k)
+    slot_or_dump = jnp.where(keep, slot, e * cap).reshape(-1)
+    src = jnp.full((e * cap,), -1, jnp.int32).at[slot_or_dump].set(
+        token_of, mode="drop"
+    )
+    back = jnp.where(keep, slot, -1).astype(jnp.int32)         # (T, k)
+    return src, back, keep
 
 
 def moe_dense(p: dict, cfg, x: Array, *, capacity: int | None = None) -> tuple[Array, Array]:
@@ -160,15 +209,9 @@ def moe_sort(
 
     e, k = mc.n_experts, mc.top_k
     cap = capacity or max(1, int(mc.capacity_factor * t * k / e))
-    onehot = jax.nn.one_hot(idx, e, dtype=jnp.int32)           # (T, k, E)
-    flat = onehot.reshape(t * k, e)
-    pos = jnp.cumsum(flat, axis=0) - flat
-    pos = (pos * flat).sum(-1).reshape(t, k)                   # rank in expert
-    keep = pos < cap
-    slot = idx * cap + pos                                     # (T, k) in [0, E*C)
-    token_of = jnp.arange(t * k, dtype=jnp.int32) // k
 
     if engine == "rowwise":
+        keep, slot, token_of = _slot_assignment(idx, t, e, cap, k)
         slot_or_dump = jnp.where(keep, slot, e * cap).reshape(-1)  # dump at end
         # source table: slot -> source token row (sentinel row t = zeros)
         src = jnp.full((e * cap + 1,), t, jnp.int32).at[slot_or_dump].set(token_of)
@@ -185,22 +228,105 @@ def moe_sort(
         # (dropped assignments target the out-of-range slot e*cap and are
         # dropped by the scatter); the masked blocked gather zero-fills
         # sentinel rows in-kernel -> ONE pallas_call, no h2 concatenate.
-        slot_or_dump = jnp.where(keep, slot, e * cap).reshape(-1)
-        src = jnp.full((e * cap,), -1, jnp.int32).at[slot_or_dump].set(
-            token_of, mode="drop"
-        )
+        src, back, _ = _dispatch_tables(idx, t, e, cap, k)
         xs = ops.gather_rows(h2, src, masked=True)             # (E*C, D)
         ye = _expert_ffn(p, cfg, xs.reshape(e, cap, d)).reshape(e * cap, d)
         # combine: out[t] = sum_k gates[t,k] * ye[back[t,k]] fused into ONE
         # kernel (dropped assignments carry the -1 sentinel -> zero term)
-        back = jnp.where(keep, slot, -1).astype(jnp.int32)     # (T, k)
         y = ops.gather_combine(ye, back, gates).astype(x.dtype)
     if "shared" in p:
         y = y + mlp.ffn_only(p["shared"], cfg, h2)
     return x + y.reshape(b, s, d), aux
 
 
+def moe_sort_ep(
+    p: dict,
+    cfg,
+    x: Array,
+    *,
+    mesh,
+    axis: str = "model",
+    capacity: int | None = None,
+) -> tuple[Array, Array]:
+    """Expert-parallel sort dispatch: the §4 blocked kernels sandwich a
+    capacity-bucketed ``all_to_all`` pair (DESIGN.md §10).
+
+    Tokens shard over mesh ``axis`` (``T`` divisible by its size ``P``) and
+    so do experts (``E = P * E_local``).  Per shard: route the local tokens,
+    dispatch them into global-expert-major (E, C, D) slot blocks with ONE
+    blocked masked gather (`core/index_plan.py` — identical kernel to
+    single-device ``moe_sort``), exchange slot blocks with ONE tiled
+    ``all_to_all`` so every shard receives exactly the rows its local
+    experts own, run the local expert FFNs, ``all_to_all`` back, and
+    restore token order with ONE fused gather+combine kernel.  The gathered
+    intermediate never touches HBM (fused kernels) and only the
+    ``(P-1)/P`` remote fraction of the fixed-size slot blocks touches the
+    wire (capacity bucketing is what keeps the exchange fixed-size).
+
+    ``capacity`` is per (source shard, expert); ``capacity >= T/P`` is
+    dropless, making the result bit-identical to dropless single-device
+    ``moe_sort`` (the aux loss is ``pmean``-reduced, equal to fp rounding).
+    """
+    from jax.sharding import PartitionSpec as P
+
+    from repro.core import dist_plan
+    from repro.launch.mesh import shard_map_compat
+    from repro.sharding.partition import ep_param_specs
+
+    mc = cfg.moe
+    b, s, d = x.shape
+    t = b * s
+    e, k = mc.n_experts, mc.top_k
+    p_sz = int(mesh.shape[axis])
+    tl = t // p_sz
+    cap = capacity or max(1, int(mc.capacity_factor * tl * k / e))
+    plan = dist_plan.plan_dist_moe(
+        dist_plan.mesh_key(mesh), axis, t, d, e, cap, k, x.dtype
+    )
+    if plan.strategy == "local":
+        return moe_sort(p, cfg, x, capacity=cap)
+    _, el, _, _ = plan.detail
+
+    pspecs = ep_param_specs(p, axis)  # experts shard over the EP axis
+
+    def f(pl_, xl):
+        h2 = common.apply_norm(cfg.norm, pl_["norm"], xl)
+        gates, idx, me, ce = _route(pl_, mc, h2)
+        # global Switch aux: token shards are equal-sized, so the global
+        # means are the pmean of the per-shard means
+        me = jax.lax.pmean(me, axis)
+        ce = jax.lax.pmean(ce, axis)
+        aux = e * jnp.sum(me * ce)
+        # local dispatch into global-expert-major slots: slot blocks for
+        # destination shard q occupy rows [q*el*cap, (q+1)*el*cap)
+        src, back, _ = _dispatch_tables(idx, tl, e, cap, k)
+        xs = ops.gather_rows(h2, src, masked=True)              # (E*C, D)
+        # wire: shard q receives every source's block q — afterwards rows
+        # group as (source shard, local expert, capacity)
+        xs = jax.lax.all_to_all(xs, axis, split_axis=0, concat_axis=0, tiled=True)
+        # (P, el, cap, D) -> (el, P, cap, D): expert-major for the blocked
+        # FFN einsums — a local §3 plan (one batched-transpose kernel)
+        xe = ops.permute(xs.reshape(p_sz, el, cap, d), (1, 0, 2, 3))
+        ye = _expert_ffn(pl_, cfg, xe.reshape(el, p_sz * cap, d))
+        ye = ops.permute(ye.reshape(el, p_sz, cap, d), (1, 0, 2, 3))
+        # wire back: every source shard gets its slots home, global-expert
+        # order restored
+        ye = jax.lax.all_to_all(
+            ye.reshape(e * cap, d), axis, split_axis=0, concat_axis=0, tiled=True
+        )
+        y = ops.gather_combine(ye, back, gates).astype(xl.dtype)
+        if "shared" in pl_:
+            y = y + mlp.ffn_only(pl_["shared"], cfg, h2)
+        return xl + y, aux
+
+    y, aux = shard_map_compat(
+        f, mesh, in_specs=(pspecs, P(axis, None)), out_specs=(P(axis, None), P())
+    )(p, x.reshape(t, d))
+    return y.reshape(b, s, d), aux
+
+
 def moe_apply(p: dict, cfg, x: Array, *, capacity: int | None = None) -> tuple[Array, Array]:
+    """Route to the configured dispatch strategy (``sort`` or ``dense``)."""
     if cfg.moe.dispatch == "sort":
         return moe_sort(p, cfg, x, capacity=capacity)
     return moe_dense(p, cfg, x, capacity=capacity)

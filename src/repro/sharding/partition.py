@@ -206,4 +206,19 @@ def residual_spec(cfg, ndim: int = 3) -> P:
 
 
 def replicated_spec(ndim: int = 3) -> P:
+    """Batch-sharded, otherwise-replicated activation spec (the default
+    residual-stream layout when sequence parallelism is off)."""
     return P(*([BATCH] + [None] * (ndim - 1)))
+
+
+def ep_param_specs(params: Any, axis: str) -> Any:
+    """Expert-parallel PartitionSpec tree for a MoE layer's params: the
+    expert-stacked weights (``w_up``/``w_gate``/``w_down``) shard their
+    leading expert axis over mesh ``axis``; router, norms, and any shared
+    expert stay replicated.  This is the in_specs tree
+    ``models.moe.moe_sort_ep`` feeds `shard_map` (DESIGN.md §10)."""
+    specs = jax.tree.map(lambda _: P(), params)
+    for name in ("w_up", "w_gate", "w_down"):
+        if name in specs:
+            specs[name] = P(axis)
+    return specs

@@ -21,7 +21,12 @@ import ast
 import pathlib
 import sys
 
-DEFAULT_ROOTS = ["src/repro/core", "src/repro/kernels"]
+DEFAULT_ROOTS = [
+    "src/repro/core",
+    "src/repro/kernels",
+    "src/repro/sharding",
+    "src/repro/launch",
+]
 
 FuncDef = (ast.FunctionDef, ast.AsyncFunctionDef)
 
