@@ -1,4 +1,5 @@
-# One-command verify recipes (CI + local).
+# One-command verify recipes (CI + local).  .github/workflows/ci.yml runs
+# exactly these targets, so CI and local invocations stay identical.
 #
 #   make test            docs-check + tier-1 suite (the ROADMAP verify command)
 #   make docs-check      public-API docstring lint (tools/check_docstrings.py)
@@ -6,6 +7,11 @@
 #                        the Pallas interpreter (REPRO_PALLAS_INTERPRET=1)
 #   make bench           benchmark harness; writes BENCH_rearrange.json
 #                        (+ BENCH_stencil.json / BENCH_moe.json / BENCH_dist.json)
+#   make bench-smoke     the same harness on tiny deterministic shapes
+#                        (no JSON written — committed numbers stay intact)
+#   make bench-check     benchmark-regression gate (tools/check_bench.py):
+#                        structure + measured-path ratios of the committed
+#                        BENCH_*.json, plus a fresh smoke replay
 #   make bench-moe       MoE dispatch suite only; writes BENCH_moe.json
 #   make bench-dist      mesh-aware suite only (8 forced host devices in a
 #                        subprocess); writes BENCH_dist.json
@@ -13,7 +19,8 @@
 #                        host devices (the tier-1 run covers the same thing
 #                        through a subprocess launcher test)
 #   make lint            byte-compile + import sanity (no external linters
-#                        are installed in the container)
+#                        are installed in the container) + fails if any
+#                        __pycache__/.pyc path is git-tracked
 #
 # `test` deliberately does NOT set REPRO_PALLAS_INTERPRET globally: model
 # smoke tests validate the default dispatch (jnp oracle on CPU), and the
@@ -23,7 +30,8 @@
 
 PYTHONPATH := src
 
-.PHONY: test test-interpret test-dist bench bench-moe bench-dist lint check docs-check
+.PHONY: test test-interpret test-dist bench bench-smoke bench-check \
+	bench-moe bench-dist lint check docs-check
 
 docs-check:
 	python tools/check_docstrings.py
@@ -39,6 +47,12 @@ test-interpret:
 bench:
 	PYTHONPATH=$(PYTHONPATH) python -m benchmarks.run
 
+bench-smoke:
+	PYTHONPATH=$(PYTHONPATH) python -m benchmarks.run --smoke
+
+bench-check:
+	PYTHONPATH=$(PYTHONPATH) python tools/check_bench.py --out bench-check.json
+
 bench-moe:
 	PYTHONPATH=$(PYTHONPATH) python -m benchmarks.run --only moe_dispatch --json ''
 
@@ -51,6 +65,11 @@ test-dist:
 
 lint:
 	python -m compileall -q src tests benchmarks examples
-	PYTHONPATH=$(PYTHONPATH) python -c "import repro.core.rearrange, repro.core.plan, repro.kernels.ops, benchmarks.run"
+	PYTHONPATH=$(PYTHONPATH) python -c "import repro.core.rearrange, repro.core.plan, repro.core.tune, repro.kernels.ops, benchmarks.run, repro.tune"
+	@tracked="$$(git ls-files | grep -E '(^|/)__pycache__/|\.pyc$$' || true)"; \
+	if [ -n "$$tracked" ]; then \
+		echo "lint: git-tracked bytecode (commit .gitignore'd files?):"; \
+		echo "$$tracked"; exit 1; \
+	fi
 
 check: lint test

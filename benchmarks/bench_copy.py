@@ -6,26 +6,42 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from benchmarks.common import memcpy_gbps, row, time_fn
+from benchmarks.common import memcpy_gbps, row, smoke, time_fn
 from repro.kernels import ops
+
+
+def _size_tag(nbytes: int) -> str:
+    """Human size label for a row name (KB below one MiB — smoke shapes)."""
+    if nbytes >= 1024 * 1024:
+        return f"{nbytes // (1024 * 1024)}MB"
+    return f"{nbytes // 1024}KB"
 
 
 def run() -> list[str]:
     out = [f"# memcpy baseline: {memcpy_gbps():.2f} GB/s"]
     copy = jax.jit(ops.copy)
-    for mb in (4, 16, 64, 256):
+    sizes = (1, 2) if smoke() else (4, 16, 64, 256)
+    cols = 128 if smoke() else 1024
+    for mb in sizes:
         n = mb * 1024 * 1024 // 4
         x = jnp.asarray(np.random.default_rng(0).standard_normal(n), jnp.float32)
-        x = x.reshape(-1, 1024)
+        x = x.reshape(-1, cols)
         t = time_fn(copy, x)
         out.append(row(f"copy_{mb}MB", t, 2 * x.nbytes))
     # ranged read
-    x = jnp.asarray(np.random.default_rng(0).standard_normal((65536, 1024)), jnp.float32)
-    t = time_fn(jax.jit(lambda a: ops.copy_range(a, jnp.int32(123), 32768)), x)
-    out.append(row("copy_range_128MB", t, 2 * 32768 * 1024 * x.dtype.itemsize))
+    rows_n = 2048 if smoke() else 65536
+    x = jnp.asarray(
+        np.random.default_rng(0).standard_normal((rows_n, cols)), jnp.float32
+    )
+    half = rows_n // 2
+    half_bytes = half * cols * x.dtype.itemsize
+    t = time_fn(jax.jit(lambda a: ops.copy_range(a, jnp.int32(123), half)), x)
+    out.append(row(f"copy_range_{_size_tag(half_bytes)}", t, 2 * half_bytes))
     # index-set gather (random permutation rows); traffic counts the data
     # rows both ways plus the int32 index-table stream
-    idx = jnp.asarray(np.random.default_rng(1).permutation(65536), jnp.int32)
+    idx = jnp.asarray(np.random.default_rng(1).permutation(rows_n), jnp.int32)
     t = time_fn(jax.jit(ops.gather_rows), x, idx)
-    out.append(row("gather_rows_256MB", t, 2 * x.nbytes + idx.nbytes))
+    out.append(
+        row(f"gather_rows_{_size_tag(2 * half_bytes)}", t, 2 * x.nbytes + idx.nbytes)
+    )
     return out

@@ -50,7 +50,7 @@ def _child() -> None:
     mesh2 = make_mesh_compat((2, 4), ("a", "b"))
 
     # --- sharded permute: one op, three strategies -----------------------
-    shape, dt = (64, 128, 256), jnp.float32
+    shape, dt = ((16, 16, 32) if common.smoke() else (64, 128, 256)), jnp.float32
     x = jnp.asarray(rng.standard_normal(shape), dt)
     gbytes = 2 * x.size * x.dtype.itemsize  # read + write, the §3 metric
     cases = [
@@ -81,9 +81,12 @@ def _child() -> None:
 
     # --- stencil: per-sweep vs halo-blocked ------------------------------
     jac = st.Stencil(((1, 0), (-1, 0), (0, 1), (0, -1)), (0.25,) * 4)
-    g = jnp.asarray(rng.standard_normal((1024, 512)), jnp.float32)
+    g = jnp.asarray(
+        rng.standard_normal((128, 64) if common.smoke() else (1024, 512)),
+        jnp.float32,
+    )
     gs = jax.device_put(g, NamedSharding(mesh, P("x", None)))
-    k = 8
+    k = 4 if common.smoke() else 8
     prog = jac.repeat(k)
     gb_grid = 2 * g.size * g.dtype.itemsize
 
@@ -119,11 +122,12 @@ def _child() -> None:
 
     # --- MoE: dense (GSPMD einsums) vs expert-parallel sort --------------
     cfg = configs.get_config("deepseek-moe-16b-smoke")
+    seq_m = 8 if common.smoke() else 32
     p = moe.moe_init(jax.random.PRNGKey(0), cfg)
     xm = jax.random.normal(
-        jax.random.PRNGKey(1), (8, 32, cfg.d_model), jnp.float32
+        jax.random.PRNGKey(1), (8, seq_m, cfg.d_model), jnp.float32
     ).astype(cfg.np_dtype)
-    t = 8 * 32
+    t = 8 * seq_m
     cap_ep = t // 8  # dropless per shard
     act_bytes = 2 * xm.size * xm.dtype.itemsize
 

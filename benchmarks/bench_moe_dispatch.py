@@ -25,7 +25,7 @@ import os
 import jax
 import jax.numpy as jnp
 
-from benchmarks.common import row, time_fn
+from benchmarks.common import row, smoke, time_fn
 from repro import configs
 from repro.core.index_plan import plan_index_op
 from repro.models import moe
@@ -53,13 +53,16 @@ def _sort_traffic_bytes(cfg, t: int, cap: int) -> tuple[int, dict]:
 
 
 def run() -> list[str]:
-    cfg = configs.get_config("deepseek-moe-16b-smoke").with_(d_model=256)
+    b, s = (2, 16) if smoke() else (B, S)
+    cfg = configs.get_config("deepseek-moe-16b-smoke").with_(
+        d_model=128 if smoke() else 256
+    )
     key = jax.random.PRNGKey(0)
     p = moe.moe_init(key, cfg)
-    x = jax.random.normal(key, (B, S, cfg.d_model), jnp.float32).astype(cfg.np_dtype)
-    t = B * S
+    x = jax.random.normal(key, (b, s, cfg.d_model), jnp.float32).astype(cfg.np_dtype)
+    t = b * s
     e, k = cfg.moe.n_experts, cfg.moe.top_k
-    cap = max(1, int(cfg.moe.capacity_factor * t * k / e))
+    cap = moe.default_capacity(cfg, t)
     nbytes, meta = _sort_traffic_bytes(cfg, t, cap)
 
     out = [f"# tokens={t} d={cfg.d_model} dtype={jnp.dtype(cfg.np_dtype).name} "

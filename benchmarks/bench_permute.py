@@ -17,7 +17,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from benchmarks.common import row, time_fn
+from benchmarks.common import row, smoke, time_fn
 from repro.core import layout
 from repro.core.plan import plan_rearrange
 from repro.kernels import ops
@@ -25,16 +25,24 @@ from repro.kernels import reorder_nd as rnd_k
 
 ORDERS = [[0, 1, 2], [0, 2, 1], [1, 0, 2], [1, 2, 0], [2, 0, 1], [2, 1, 0]]
 
-# the transformer head permute: (B, S, H, D) and its inverse layout
-HEAD_SHAPES = [
-    ("split_heads", (8, 512, 16, 64), (0, 2, 1, 3)),
-    ("merge_heads", (8, 16, 512, 64), (0, 2, 1, 3)),
-]
+
+def _head_shapes() -> list[tuple]:
+    """The transformer head permute: (B, S, H, D) and its inverse layout."""
+    if smoke():
+        return [
+            ("split_heads", (2, 64, 4, 16), (0, 2, 1, 3)),
+            ("merge_heads", (2, 4, 64, 16), (0, 2, 1, 3)),
+        ]
+    return [
+        ("split_heads", (8, 512, 16, 64), (0, 2, 1, 3)),
+        ("merge_heads", (8, 16, 512, 64), (0, 2, 1, 3)),
+    ]
 
 
 def _table1() -> list[str]:
+    shape = (16, 32, 64) if smoke() else (128, 256, 512)
     x = jnp.asarray(
-        np.random.default_rng(0).standard_normal((128, 256, 512)), jnp.float32
+        np.random.default_rng(0).standard_normal(shape), jnp.float32
     )
     nbytes = 2 * x.nbytes
     out = []
@@ -66,7 +74,7 @@ def _head_family() -> list[str]:
     if force_interp:
         os.environ["REPRO_PALLAS_INTERPRET"] = "1"
     try:
-        for name, shape, perm in HEAD_SHAPES:
+        for name, shape, perm in _head_shapes():
             x = jnp.asarray(rng.standard_normal(shape), jnp.float32)
             nbytes = 2 * x.nbytes
             plan = plan_rearrange(shape, x.dtype, perm)
@@ -83,6 +91,8 @@ def _head_family() -> list[str]:
                     plan_mode=plan.mode,
                     kernel=plan.kernel,
                     measured="pallas",
+                    plan_source="heuristic",
+                    tiles=f"{plan.block_r}x{plan.block_c}",
                     improvement_vs_seed=round(t_seed / t_engine, 3),
                 )
             )
@@ -95,6 +105,27 @@ def _head_family() -> list[str]:
                     plan_mode="seed_generic",
                     kernel="reorder_nd",
                     measured="pallas",
+                )
+            )
+            # the autotuned plan next to the heuristic one (DESIGN.md §11):
+            # measured selection on TPU, deterministic cost model elsewhere
+            plan_t = plan_rearrange(shape, x.dtype, perm, tuned=True)
+            t_tuned = time_fn(jax.jit(lambda a, p=plan_t: ops.apply_plan(a, p)), x)
+            out.append(
+                row(
+                    f"{name}_tuned",
+                    t_tuned,
+                    nbytes,
+                    f"[tiles {plan_t.block_r}x{plan_t.block_c} vs "
+                    f"{plan.block_r}x{plan.block_c} heuristic, "
+                    f"{t_engine/t_tuned:.2f}x]",
+                    plan_mode=plan_t.mode,
+                    kernel=plan_t.kernel,
+                    measured="pallas",
+                    plan_source="tuned",
+                    tiles=f"{plan_t.block_r}x{plan_t.block_c}",
+                    tiles_heuristic=f"{plan.block_r}x{plan.block_c}",
+                    improvement_vs_heuristic=round(t_engine / t_tuned, 3),
                 )
             )
     finally:

@@ -6,7 +6,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from benchmarks.common import row, time_fn
+from benchmarks.common import row, smoke, time_fn
 from repro.core import layout
 from repro.core.plan import plan_rearrange
 from repro.kernels import ops
@@ -16,19 +16,21 @@ def rr_plan(shape, perm):
     return plan_rearrange(shape, jnp.float32, perm)
 
 
-# (paper order vector, shape) — Table 2 rows
-ROWS = [
-    ([1, 0, 2], (256, 256, 256)),
-    ([1, 0, 2, 3], (256, 256, 256, 1)),
-    ([3, 2, 0, 1], (256, 256, 1, 256)),
-    ([3, 0, 2, 1, 4], (256, 16, 1, 256, 16)),
-]
+def _rows() -> list[tuple]:
+    """(paper order vector, shape) — Table 2 rows (scaled down in smoke)."""
+    s, v = (32, 4) if smoke() else (256, 16)
+    return [
+        ([1, 0, 2], (s, s, s)),
+        ([1, 0, 2, 3], (s, s, s, 1)),
+        ([3, 2, 0, 1], (s, s, 1, s)),
+        ([3, 0, 2, 1, 4], (s, v, 1, s, v)),
+    ]
 
 
 def run() -> list[str]:
     out = []
     rng = np.random.default_rng(0)
-    for order, shape in ROWS:
+    for order, shape in _rows():
         x = jnp.asarray(rng.standard_normal(shape), jnp.float32)
         perm = layout.paper_order_to_perm(order)
         fn = jax.jit(lambda a, p=perm: ops.permute(a, p))

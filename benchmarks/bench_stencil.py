@@ -17,7 +17,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from benchmarks.common import row, time_fn
+from benchmarks.common import row, smoke, time_fn
 from repro.core import stencil as st
 from repro.kernels import ops
 
@@ -54,15 +54,40 @@ def _fused_vs_per_sweep(out: list[str], n: int, k: int, tag: str = "") -> None:
             f"[plan {plan.bytes_per_sweep_path / max(plan.bytes_moved, 1):.1f}x]",
             variant="fused", k=k, size=n, plan_mode=plan.mode,
             measured=measured,
+            plan_source="heuristic",
             plan_bytes_fused=plan.bytes_moved,
             plan_bytes_per_sweep=plan.bytes_per_sweep_path,
         )
     )
+    # the autotuned panel next to the heuristic one (DESIGN.md §11)
+    plan_t = prog.compile(x.shape, x.dtype, tuned=True)
+    if plan_t.mode == "fused":
+        fn_t = jax.jit(
+            lambda a, p=plan_t: ops.stencil_program(
+                a, p.stages_exec, boundary="zero",
+                block_rows=p.block_rows or None, fused=True,
+            )
+        )
+        t_t = time_fn(fn_t, x)
+        out.append(
+            row(
+                f"jacobi{n}{tag}_tuned_k{k}", t_t, useful,
+                f"[panel {plan_t.block_rows} vs {plan.block_rows} heuristic, "
+                f"{t/t_t:.2f}x]",
+                variant="fused", k=k, size=n, plan_mode=plan_t.mode,
+                measured=measured,
+                plan_source="tuned",
+                panel=plan_t.block_rows,
+                panel_heuristic=plan.block_rows,
+                improvement_vs_heuristic=round(t / t_t, 3),
+            )
+        )
 
 
 def run() -> list[str]:
     out = []
-    x = jnp.asarray(np.random.default_rng(0).standard_normal((4096, 4096)), jnp.float32)
+    side = 128 if smoke() else 4096
+    x = jnp.asarray(np.random.default_rng(0).standard_normal((side, side)), jnp.float32)
     nbytes = 2 * x.nbytes  # in + out (the stencil reads each cell ~1x via halo reuse)
     for order in (1, 2, 3, 4):
         s = st.fd_laplacian(order)
@@ -75,8 +100,9 @@ def run() -> list[str]:
     out.append(row("box_blur_3x3", t, nbytes))
 
     # fused repeat(k) programs vs k separate sweeps, two problem sizes
-    for n in (2048, 4096):
-        _fused_vs_per_sweep(out, n, SWEEPS)
+    sweeps = 4 if smoke() else SWEEPS
+    for n in (128,) if smoke() else (2048, 4096):
+        _fused_vs_per_sweep(out, n, sweeps)
 
     # the same comparison driven through the actual Pallas kernel (interpret
     # mode off-TPU) on a small grid, so the fused kernel itself is measured
@@ -84,7 +110,7 @@ def run() -> list[str]:
         prior = os.environ.get("REPRO_PALLAS_INTERPRET")
         os.environ["REPRO_PALLAS_INTERPRET"] = "1"
         try:
-            _fused_vs_per_sweep(out, 512, SWEEPS, tag="_interp")
+            _fused_vs_per_sweep(out, 64 if smoke() else 512, sweeps, tag="_interp")
         finally:
             if prior is None:
                 os.environ.pop("REPRO_PALLAS_INTERPRET", None)

@@ -9,14 +9,31 @@ numbers for the same ops come from the dry-run analysis (bench_roofline).
 
 from __future__ import annotations
 
+import os
 import time
 
 import jax
 import numpy as np
 
+# --smoke (benchmarks.run) flips this: tiny shapes, reduced timing loops,
+# deterministic seeds — the harness itself exercised on every PR (and by
+# tools/check_bench.py) instead of only on bare-metal runs.  The env
+# mirror propagates the flag into the bench_dist subprocess.
+SMOKE = False
 
-def time_fn(fn, *args, warmup: int = 2, iters: int = 5) -> float:
+
+def smoke() -> bool:
+    """True when the harness runs in --smoke mode (tiny deterministic
+    shapes; see benchmarks/run.py and tools/check_bench.py)."""
+    return SMOKE or os.environ.get("REPRO_BENCH_SMOKE", "0") == "1"
+
+
+def time_fn(fn, *args, warmup: int | None = None, iters: int | None = None) -> float:
     """Best-of-iters seconds for fn(*args) with device sync."""
+    if warmup is None:
+        warmup = 1 if smoke() else 2
+    if iters is None:
+        iters = 2 if smoke() else 5
     for _ in range(warmup):
         r = fn(*args)
         jax.block_until_ready(r)
@@ -32,9 +49,11 @@ def time_fn(fn, *args, warmup: int = 2, iters: int = 5) -> float:
 _MEMCPY_CACHE: dict[int, float] = {}
 
 
-def memcpy_gbps(nbytes: int = 1 << 28) -> float:
+def memcpy_gbps(nbytes: int | None = None) -> float:
     """Host memcpy bandwidth — the baseline every kernel is normalized to
     (the paper's cudaMemcpy d2d reference)."""
+    if nbytes is None:
+        nbytes = 1 << 24 if smoke() else 1 << 28
     if nbytes not in _MEMCPY_CACHE:
         src = np.empty(nbytes, np.uint8)
         dst = np.empty_like(src)

@@ -1,6 +1,6 @@
 """Benchmark harness — one module per paper table/figure.
 
-  PYTHONPATH=src python -m benchmarks.run [--only copy,permute,...]
+  PYTHONPATH=src python -m benchmarks.run [--only copy,permute,...] [--smoke]
 
 Prints ``name,us_per_call,derived`` CSV per row (derived = achieved GB/s
 and fraction of host memcpy — the paper's normalization), and writes the
@@ -12,12 +12,23 @@ the MoE dispatch suite's rows (dense vs rowwise-sort vs fused-sort
 IndexPlan comparison) to ``BENCH_moe.json``, and the mesh-aware suite's
 rows (DistPlan strategies with bytes-on-wire accounting, run on 8 forced
 host devices in a subprocess) to ``BENCH_dist.json``.
+
+The head-permute and stencil suites also report the autotuned plan next
+to the heuristic one (``plan_source`` field, DESIGN.md §11) so tuned and
+heuristic measured paths are tracked side by side.
+
+``--smoke`` runs every suite on tiny deterministic shapes with reduced
+timing loops (interpret-safe), and — unless a ``--json*`` path is given
+explicitly — suppresses the JSON artifacts so a smoke run can never
+overwrite the committed bare-metal ``BENCH_*.json`` numbers.  This is
+what ``tools/check_bench.py`` (``make bench-check``) replays on every PR.
 """
 
 from __future__ import annotations
 
 import argparse
 import json
+import os
 import sys
 import time
 
@@ -39,25 +50,44 @@ def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--only", default="")
     ap.add_argument(
-        "--json", default="BENCH_rearrange.json", help="machine-readable output path"
+        "--smoke",
+        action="store_true",
+        help="tiny deterministic shapes, reduced timing loops, no JSON "
+        "unless a --json* path is given explicitly",
+    )
+    ap.add_argument(
+        "--json", default=None, help="machine-readable output path"
     )
     ap.add_argument(
         "--json-stencil",
-        default="BENCH_stencil.json",
+        default=None,
         help="output path for the stencil suite's plan-engine rows",
     )
     ap.add_argument(
         "--json-moe",
-        default="BENCH_moe.json",
+        default=None,
         help="output path for the MoE dispatch suite's plan-engine rows",
     )
     ap.add_argument(
         "--json-dist",
-        default="BENCH_dist.json",
+        default=None,
         help="output path for the mesh-aware suite's strategy-comparison rows",
     )
     args = ap.parse_args()
     only = set(args.only.split(",")) if args.only else None
+    if args.smoke:
+        common.SMOKE = True
+        os.environ["REPRO_BENCH_SMOKE"] = "1"  # reaches the dist subprocess
+    defaults = {
+        "json": "BENCH_rearrange.json",
+        "json_stencil": "BENCH_stencil.json",
+        "json_moe": "BENCH_moe.json",
+        "json_dist": "BENCH_dist.json",
+    }
+    for attr, path in defaults.items():
+        if getattr(args, attr) is None:
+            # smoke runs never overwrite the committed bare-metal numbers
+            setattr(args, attr, "" if args.smoke else path)
 
     common.RECORDS.clear()
     print("name,us_per_call,derived")

@@ -35,6 +35,11 @@ the wire:
 Every plan carries the predicted bytes-on-wire of its strategy so callers
 and ``benchmarks/bench_dist.py`` can compare strategies the same way the
 per-device planners expose predicted HBM traffic.
+
+``tuned=`` (DESIGN.md §11) ranks every *feasible* strategy decomposition
+through the autotuner's cost model instead of taking the first feasible
+one; all strategies are movement-only and bit-identical, so the swap
+never changes results.
 """
 
 from __future__ import annotations
@@ -47,8 +52,10 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import PartitionSpec as P
 
+from repro.core import tune
 from repro.core.plan import ICI_GBPS_PER_LINK, plan_rearrange
 from repro.kernels import ops
+from repro.utils.roofline import movement_cost_s
 
 # NOTE: the shard_map/ppermute shims live in repro.launch.mesh and are
 # imported lazily inside the executors — the planner half of this module
@@ -197,15 +204,22 @@ def permuted_spec(in_spec: tuple, perm: Sequence[int]) -> tuple:
     return tuple(in_spec[p] for p in perm)
 
 
-@functools.lru_cache(maxsize=4096)
-def _plan_rearrange_cached(
+def _build_rearrange(
     mesh_shape: tuple,
     in_spec: tuple,
     out_spec: tuple | None,
     shape: tuple[int, ...],
     dtype_name: str,
     perm: tuple[int, ...],
+    strategy: str | None = None,
 ) -> DistPlan:
+    """Decompose one sharded permute into collective + local plan.
+
+    ``strategy`` forces one route (the tuner's hook — an infeasible
+    forced strategy raises ``ValueError``); with ``None`` the planner
+    keeps its preference order local > all_to_all > replicate, exactly
+    the pre-tuner behavior.
+    """
     sizes = _axis_sizes(mesh_shape)
     itemsize = jnp.dtype(dtype_name).itemsize
     n_elems = 1
@@ -253,9 +267,12 @@ def _plan_rearrange_cached(
     # (covers fully-replicated arrays and size-1 mesh axes, where any
     # requested output sharding is a no-op and the permute is local)
     if in_local is not None and sig(out_spec) == sig(derived):
-        key, lb = local_plan_of(in_local)
-        return _mk("rearrange", "local", mesh_shape, None, in_spec, out_spec,
-                   key, (), (), 0, lb)
+        if strategy in (None, "local"):
+            key, lb = local_plan_of(in_local)
+            return _mk("rearrange", "local", mesh_shape, None, in_spec, out_spec,
+                       key, (), (), 0, lb)
+    elif strategy == "local":
+        raise ValueError("local strategy infeasible: output sharding differs")
 
     # --- axis-aligned redistribution: one tiled all_to_all, then local ---
     in_sh = None
@@ -264,7 +281,12 @@ def _plan_rearrange_cached(
         out_sh = sharded_axes(sig(out_spec))
     except ValueError:
         in_sh = None
-    if in_sh is not None and len(in_sh) == 1 and len(out_sh) == 1:
+    if (
+        strategy in (None, "all_to_all")
+        and in_sh is not None
+        and len(in_sh) == 1
+        and len(out_sh) == 1
+    ):
         (a, m_in), = in_sh.items()
         (j, m_out), = out_sh.items()
         b = perm[j]  # logical input axis the output wants sharded
@@ -284,6 +306,8 @@ def _plan_rearrange_cached(
             wire = gbytes * (p - 1) // p * _replicas(mesh_shape, p)
             return _mk("rearrange", "all_to_all", mesh_shape, m_in, in_spec,
                        out_spec, key, (a, b, p), ("all_to_all",), wire, lb)
+    if strategy == "all_to_all":
+        raise ValueError("all_to_all strategy infeasible for these specs")
 
     # --- fallback: gather everything, run the full local plan, slice ---
     # within one dim the gathers must run minor-axis-first: the minor
@@ -330,6 +354,86 @@ def _plan_rearrange_cached(
                ("all_gather",) * len(gather_axes), wire, lb)
 
 
+@functools.lru_cache(maxsize=4096)
+def _plan_rearrange_cached(
+    mesh_shape: tuple,
+    in_spec: tuple,
+    out_spec: tuple | None,
+    shape: tuple[int, ...],
+    dtype_name: str,
+    perm: tuple[int, ...],
+) -> DistPlan:
+    return _build_rearrange(mesh_shape, in_spec, out_spec, shape, dtype_name, perm)
+
+
+def _dist_cost_s(plan: DistPlan) -> float:
+    """Strategy score: local HBM traffic plus the wire term (bytes at one
+    ICI link, one launch latency per collective)."""
+    return movement_cost_s(
+        plan.bytes_local,
+        1,
+        wire_bytes=plan.bytes_on_wire,
+        collectives=len(plan.collectives),
+    )
+
+
+def _select_strategy(
+    engine: str, key: str, plans: list[DistPlan], mode: str
+) -> DistPlan:
+    """Pick among feasible strategy decompositions by cost model.
+
+    Strategies are proven bit-identical (the §10 test suite), so choice
+    only moves bytes between wire and HBM.  There is no measured runner —
+    a cached planner cannot re-materialize the caller's mesh — so the
+    tuner's cost fallback does the ranking in every mode; the point of
+    routing through :func:`repro.core.tune.select` is the shared tie-break
+    contract (the planner's preferred strategy is first) and the recorded
+    search space.
+    """
+    cands = [
+        tune.Candidate(label=p.strategy, params=(("i", i),), cost_s=_dist_cost_s(p))
+        for i, p in enumerate(plans)
+    ]
+    choice = tune.select(engine, key, cands, None, mode=mode)
+    return plans[choice.param_dict()["i"]]
+
+
+@functools.lru_cache(maxsize=4096)
+def _plan_rearrange_tuned(
+    mesh_shape: tuple,
+    in_spec: tuple,
+    out_spec: tuple | None,
+    shape: tuple[int, ...],
+    dtype_name: str,
+    perm: tuple[int, ...],
+    mode: str,
+) -> DistPlan:
+    base = _plan_rearrange_cached(
+        mesh_shape, in_spec, out_spec, shape, dtype_name, perm
+    )
+    if base.strategy in ("local", "noop"):
+        return base  # zero bytes on wire: nothing can beat it
+    plans = [base]
+    for strat in STRATEGIES:
+        if strat in (base.strategy, "local", "halo", "ep", "noop"):
+            continue
+        try:
+            plans.append(
+                _build_rearrange(
+                    mesh_shape, in_spec, out_spec, shape, dtype_name, perm, strat
+                )
+            )
+        except ValueError:
+            continue
+    return _select_strategy(
+        "dist-rearrange",
+        f"mesh={mesh_shape}|{in_spec}->{out_spec}|shape={shape}"
+        f"|dtype={dtype_name}|perm={perm}",
+        plans,
+        mode,
+    )
+
+
 def plan_dist_rearrange(
     mesh_shape: tuple,
     in_spec: tuple,
@@ -337,6 +441,8 @@ def plan_dist_rearrange(
     shape: Sequence[int],
     dtype,
     perm: Sequence[int],
+    *,
+    tuned: bool | None = None,
 ) -> DistPlan:
     """Plan (and cache) a sharded ``permute(x, perm)``.
 
@@ -344,12 +450,18 @@ def plan_dist_rearrange(
     :func:`spec_key` tuples (``out_spec=None`` requests the comm-free
     sharding, i.e. the input sharding carried along by the permutation).
     Repeated calls with equal arguments return the *identical* plan object.
+
+    ``tuned=None`` resolves from ``REPRO_TUNE``; ``tuned=True`` ranks every
+    feasible strategy decomposition through the autotuner's cost model
+    (DESIGN.md §11) instead of taking the first feasible one.
     """
     perm_t = tuple(int(p) for p in perm)
     shape_t = tuple(int(s) for s in shape)
     if sorted(perm_t) != list(range(len(shape_t))):
         raise ValueError(f"bad perm {perm_t} for rank {len(shape_t)}")
-    return _plan_rearrange_cached(
+    if tuned is None:
+        tuned = tune.tune_default()
+    key = (
         tuple(mesh_shape),
         spec_key(in_spec, len(shape_t)),
         None if out_spec is None else spec_key(out_spec, len(shape_t)),
@@ -357,6 +469,9 @@ def plan_dist_rearrange(
         jnp.dtype(dtype).name,
         perm_t,
     )
+    if not tuned:
+        return _plan_rearrange_cached(*key)
+    return _plan_rearrange_tuned(*key, tune.resolve_mode())
 
 
 @functools.lru_cache(maxsize=1024)
@@ -411,15 +526,22 @@ def plan_dist_interlace(
 # ---------------------------------------------------------------------------
 
 
-@functools.lru_cache(maxsize=1024)
-def _plan_stencil_cached(
+def _build_stencil(
     mesh_shape: tuple,
     axis: str,
     shape: tuple[int, int],
     dtype_name: str,
     stages: tuple,
     boundary: str,
+    strategy: str | None = None,
 ) -> DistPlan:
+    """Decompose one row-sharded stencil program into halo k-blocks (or a
+    fallback strategy).
+
+    ``strategy`` forces ``halo`` / ``replicate`` (the tuner's hook; an
+    infeasible forced strategy raises ``ValueError``); ``None`` keeps the
+    pre-tuner preference: halo whenever every stage radius fits one shard.
+    """
     from repro.core import stencil as st
 
     sizes = _axis_sizes(mesh_shape)
@@ -441,9 +563,12 @@ def _plan_stencil_cached(
         raise ValueError(f"grid rows {H} not divisible by mesh axis {axis!r} ({p})")
     hl = H // p
 
-    if max(radii, default=0) > hl:
-        # a single stage reaches past the nearest neighbor: gather the full
-        # grid, run the whole single-device plan, keep the owned rows
+    if max(radii, default=0) > hl or strategy == "replicate":
+        if strategy == "halo":
+            raise ValueError("halo strategy infeasible: a stage radius "
+                             "reaches past the nearest neighbor")
+        # gather the full grid, run the whole single-device plan, keep the
+        # owned rows
         lp = st.plan_stencil(shape, dtype_name, stages, boundary)
         wire = H * W * itemsize * (p - 1) * _replicas(mesh_shape, p)
         return _mk("stencil", "replicate", mesh_shape, axis, in_spec, in_spec,
@@ -487,6 +612,49 @@ def _plan_stencil_cached(
                collectives, wire, bytes_local)
 
 
+@functools.lru_cache(maxsize=1024)
+def _plan_stencil_cached(
+    mesh_shape: tuple,
+    axis: str,
+    shape: tuple[int, int],
+    dtype_name: str,
+    stages: tuple,
+    boundary: str,
+) -> DistPlan:
+    return _build_stencil(mesh_shape, axis, shape, dtype_name, stages, boundary)
+
+
+@functools.lru_cache(maxsize=1024)
+def _plan_stencil_tuned(
+    mesh_shape: tuple,
+    axis: str,
+    shape: tuple[int, int],
+    dtype_name: str,
+    stages: tuple,
+    boundary: str,
+    mode: str,
+) -> DistPlan:
+    base = _plan_stencil_cached(mesh_shape, axis, shape, dtype_name, stages, boundary)
+    if base.strategy != "halo":
+        return base  # local/noop have no wire; replicate means halo is infeasible
+    plans = [base]
+    try:
+        plans.append(
+            _build_stencil(
+                mesh_shape, axis, shape, dtype_name, stages, boundary, "replicate"
+            )
+        )
+    except ValueError:
+        pass
+    return _select_strategy(
+        "dist-stencil",
+        f"mesh={mesh_shape}|axis={axis}|shape={shape}|dtype={dtype_name}"
+        f"|b={boundary}|n_stages={len(stages)}",
+        plans,
+        mode,
+    )
+
+
 def plan_dist_stencil(
     mesh_shape: tuple,
     axis: str,
@@ -494,6 +662,8 @@ def plan_dist_stencil(
     dtype,
     stages: tuple,
     boundary: str = "zero",
+    *,
+    tuned: bool | None = None,
 ) -> DistPlan:
     """Plan (and cache) a stencil *program* on a row-sharded grid.
 
@@ -503,14 +673,23 @@ def plan_dist_stencil(
     radius fits one shard; each block costs one ``ppermute`` pair (send the
     top/bottom edge rows to the two neighbors) and runs as ONE fused local
     kernel per shard (§9 temporal blocking on the halo-extended shard).
+
+    ``tuned=None`` resolves from ``REPRO_TUNE``; ``tuned=True`` ranks the
+    halo decomposition against the replicate fallback through the
+    autotuner's cost model (DESIGN.md §11).
     """
     shape_t = tuple(int(s) for s in shape)
     if len(shape_t) != 2:
         raise ValueError(f"stencil plans want 2-D shapes, got {shape_t}")
-    return _plan_stencil_cached(
+    if tuned is None:
+        tuned = tune.tune_default()
+    key = (
         tuple(mesh_shape), str(axis), shape_t, jnp.dtype(dtype).name,
         tuple(stages), str(boundary),
     )
+    if not tuned:
+        return _plan_stencil_cached(*key)
+    return _plan_stencil_tuned(*key, tune.resolve_mode())
 
 
 # ---------------------------------------------------------------------------
@@ -607,6 +786,7 @@ def shard_permute(
     mesh,
     in_spec,
     out_spec=None,
+    tuned: bool | None = None,
 ) -> Array:
     """Sharded N-D permute through the distributed plan engine.
 
@@ -628,7 +808,7 @@ def shard_permute(
     plan = plan_dist_rearrange(
         mesh_key(mesh), spec_key(in_spec, x.ndim),
         None if out_spec is None else spec_key(out_spec, x.ndim),
-        x.shape, x.dtype, perm,
+        x.shape, x.dtype, perm, tuned=tuned,
     )
     if plan.strategy == "local":
         f = lambda xl: ops.permute(xl, perm)  # noqa: E731
@@ -687,6 +867,7 @@ def shard_stencil(
     mesh,
     axis: str,
     boundary: str = "zero",
+    tuned: bool | None = None,
 ) -> Array:
     """Run a :class:`repro.core.stencil.StencilProgram` on a row-sharded
     2-D grid with halo exchange (DESIGN.md §10).
@@ -703,7 +884,8 @@ def shard_stencil(
     if x.ndim != 2:
         raise ValueError(f"stencil programs want 2-D grids, got {x.shape}")
     plan = plan_dist_stencil(
-        mesh_key(mesh), axis, x.shape, x.dtype, program.stages, boundary
+        mesh_key(mesh), axis, x.shape, x.dtype, program.stages, boundary,
+        tuned=tuned,
     )
     if plan.strategy == "noop":
         return x
@@ -753,7 +935,9 @@ def dist_plan_cache_info() -> dict:
     """Expose the per-workload plan-memo stats (tests / benchmarks)."""
     return {
         "rearrange": _plan_rearrange_cached.cache_info(),
+        "rearrange_tuned": _plan_rearrange_tuned.cache_info(),
         "interlace": _plan_interlace_cached.cache_info(),
         "stencil": _plan_stencil_cached.cache_info(),
+        "stencil_tuned": _plan_stencil_tuned.cache_info(),
         "moe": _plan_moe_cached.cache_info(),
     }

@@ -36,8 +36,16 @@ from typing import Sequence
 
 import jax.numpy as jnp
 
+from repro.core import tune
 from repro.core.plan import HBM_GBPS
-from repro.kernels.tiling import VMEM_BUDGET, cdiv, round_up, sublanes
+from repro.kernels.tiling import (
+    VMEM_BUDGET,
+    cdiv,
+    round_up,
+    row_block_candidates,
+    sublanes,
+)
+from repro.utils.roofline import movement_cost_s
 
 #: semantics accepted by :func:`plan_index_op`.
 SEMANTICS = ("gather", "scatter", "gather_combine")
@@ -63,8 +71,8 @@ class IndexPlan:
     """
 
     semantics: str  # gather | scatter | gather_combine
-    mode: str  # blocked | oracle | noop
-    kernel: str  # gather_rows_blocked | gather_combine_blocked | ref | noop
+    mode: str  # blocked | rowwise | oracle | noop
+    kernel: str  # gather_rows_blocked | gather_combine_blocked | gather_rows | ref | noop
     n_src: int  # rows in the source array
     n_out: int  # rows produced
     row_elems: int  # elements per row (C)
@@ -88,8 +96,7 @@ class IndexPlan:
         )
 
 
-@functools.lru_cache(maxsize=4096)
-def _plan_cached(
+def _build_plan(
     n_src: int,
     row_elems: int,
     dtype_name: str,
@@ -97,7 +104,16 @@ def _plan_cached(
     semantics: str,
     masked: bool,
     top_k: int,
+    block_rows: int | None = None,
+    engine: str | None = None,
 ) -> IndexPlan:
+    """Route one index-set movement and materialize the plan.
+
+    ``block_rows`` overrides the heuristic row-block height and
+    ``engine="rowwise"`` forces the seed one-row-per-grid-step kernel
+    (the tuner's hooks); with both defaults this is exactly the pre-tuner
+    planner.
+    """
     itemsize = jnp.dtype(dtype_name).itemsize
 
     def _mk(mode, kernel, br, grid, table_rows, bytes_moved):
@@ -130,7 +146,20 @@ def _plan_cached(
     row_bytes = max(row_elems * itemsize, 1)
     br_budget = max(VMEM_BUDGET // (2 * row_bytes * top_k), 1)
     br = min(round_up(BLOCK_ROWS_TARGET, sl), max(br_budget // sl * sl, sl), n_out)
+    if block_rows is not None:
+        br = min(int(block_rows), n_out)
     grid = cdiv(n_out, br)
+
+    if engine == "rowwise":
+        # the seed per-row kernel: one grid step per output row, no
+        # sentinel masking, gather semantics only (the tuner offers this
+        # engine only where those preconditions hold)
+        if semantics != "gather" or masked or top_k != 1:
+            raise ValueError("rowwise engine is unmasked gather-only")
+        return _mk(
+            "rowwise", "gather_rows", 1, n_out, n_out,
+            2 * n_out * row_bytes + n_out * 4,
+        )
 
     # traffic: each output row is one read + one write of row_bytes (upper
     # bound under masking), plus the int32 index-table stream; combine
@@ -153,6 +182,115 @@ def _plan_cached(
     return _mk("blocked", "gather_rows_blocked", br, grid, grid * br, bytes_moved)
 
 
+@functools.lru_cache(maxsize=4096)
+def _plan_cached(
+    n_src: int,
+    row_elems: int,
+    dtype_name: str,
+    n_out: int,
+    semantics: str,
+    masked: bool,
+    top_k: int,
+) -> IndexPlan:
+    return _build_plan(n_src, row_elems, dtype_name, n_out, semantics, masked, top_k)
+
+
+def _candidates(base: IndexPlan, dtype_name: str) -> list[tune.Candidate]:
+    """The index engine's search space: the row-block neighborhood of the
+    blocked kernel (heuristic first) plus — for unmasked single-fan-in
+    gathers, where the two kernels are bit-identical — the seed rowwise
+    engine as an engine-choice candidate."""
+    itemsize = jnp.dtype(dtype_name).itemsize
+    row_bytes = max(base.row_elems * itemsize, 1)
+    cands = []
+    for br in row_block_candidates(
+        base.block_rows, base.n_out, row_bytes, dtype_name, base.top_k
+    ):
+        grid = cdiv(base.n_out, br)
+        # padded table rows round the data traffic up to whole blocks
+        padded = 2 * grid * br * row_bytes * max(base.top_k, 1)
+        cands.append(
+            tune.Candidate(
+                label=f"br{br}",
+                params=(("block_rows", br), ("engine", "blocked")),
+                cost_s=movement_cost_s(padded, grid),
+            )
+        )
+    if base.semantics == "gather" and not base.masked and base.top_k == 1:
+        cands.append(
+            tune.Candidate(
+                label="rowwise",
+                params=(("block_rows", 1), ("engine", "rowwise")),
+                cost_s=movement_cost_s(2 * base.n_out * row_bytes, base.n_out),
+            )
+        )
+    return cands
+
+
+def _runner_factory(
+    n_src: int, row_elems: int, dtype_name: str, n_out: int,
+    semantics: str, masked: bool, top_k: int,
+):
+    """Measured-mode runner: execute one candidate plan on deterministic
+    sample data through the dispatch layer's plan executor."""
+
+    def factory(cand: tune.Candidate):
+        import jax
+
+        from repro.kernels import ops  # lazy: ops imports this module
+
+        d = cand.param_dict()
+        plan = _build_plan(
+            n_src, row_elems, dtype_name, n_out, semantics, masked, top_k,
+            block_rows=d["block_rows"], engine=d["engine"],
+        )
+        x = tune.sample_array((n_src, row_elems), dtype_name)
+        rows = n_out * top_k if semantics == "gather_combine" else n_out
+        idx = (jnp.arange(rows, dtype=jnp.int32) * 7919) % max(n_src, 1)
+        if semantics == "gather_combine":
+            idx = idx.reshape(n_out, top_k)
+            gates = jnp.full((n_out, top_k), 1.0 / top_k, jnp.float32)
+            fn = jax.jit(lambda a, i, g: ops.apply_index_plan(a, i, plan, gates=g))
+            return lambda: fn(x, idx, gates)
+        if semantics == "scatter":
+            idx = (jnp.arange(n_src, dtype=jnp.int32) * 7919) % max(n_out, 1)
+        fn = jax.jit(lambda a, i: ops.apply_index_plan(a, i, plan))
+        return lambda: fn(x, idx)
+
+    return factory
+
+
+@functools.lru_cache(maxsize=4096)
+def _plan_tuned_cached(
+    n_src: int,
+    row_elems: int,
+    dtype_name: str,
+    n_out: int,
+    semantics: str,
+    masked: bool,
+    top_k: int,
+    mode: str,
+) -> IndexPlan:
+    base = _plan_cached(n_src, row_elems, dtype_name, n_out, semantics, masked, top_k)
+    if base.mode == "noop":
+        return base  # nothing to tune: no kernel runs
+    choice = tune.select(
+        "index",
+        f"src=({n_src},{row_elems})|dtype={dtype_name}|n_out={n_out}"
+        f"|{semantics}|masked={masked}|k={top_k}",
+        _candidates(base, dtype_name),
+        _runner_factory(n_src, row_elems, dtype_name, n_out, semantics, masked, top_k),
+        mode=mode,
+    )
+    d = choice.param_dict()
+    if d["engine"] == "blocked" and d["block_rows"] == base.block_rows:
+        return base  # heuristic won: tuned and untuned plans are the SAME object
+    return _build_plan(
+        n_src, row_elems, dtype_name, n_out, semantics, masked, top_k,
+        block_rows=d["block_rows"], engine=d["engine"],
+    )
+
+
 def plan_index_op(
     src_shape: Sequence[int],
     dtype,
@@ -161,6 +299,7 @@ def plan_index_op(
     *,
     masked: bool = False,
     top_k: int = 1,
+    tuned: bool | None = None,
 ) -> IndexPlan:
     """Plan (and cache) an index-set movement.
 
@@ -176,6 +315,12 @@ def plan_index_op(
                              masked=True)
         assert plan is plan_index_op((1024, 256), jnp.float32, 2048,
                                      "gather", masked=True)  # cached
+
+    ``tuned=None`` (default) resolves from ``REPRO_TUNE``; ``tuned=True``
+    routes through the autotuner (DESIGN.md §11): the row-block
+    neighborhood — plus the rowwise engine where it is bit-identical — is
+    measured (TPU) or cost-scored (elsewhere), same lru identity
+    guarantees as untuned plans.
     """
     if semantics not in SEMANTICS:
         raise ValueError(f"unknown semantics {semantics!r}; want one of {SEMANTICS}")
@@ -186,7 +331,9 @@ def plan_index_op(
     if top_k < 1:
         raise ValueError(f"top_k must be >= 1, got {top_k}")
     n_src, row_elems = (int(s) for s in src_shape)
-    return _plan_cached(
+    if tuned is None:
+        tuned = tune.tune_default()
+    key = (
         n_src,
         row_elems,
         jnp.dtype(dtype).name,
@@ -195,6 +342,9 @@ def plan_index_op(
         bool(masked),
         int(top_k),
     )
+    if not tuned:
+        return _plan_cached(*key)
+    return _plan_tuned_cached(*key, tune.resolve_mode())
 
 
 def index_plan_cache_info():

@@ -18,6 +18,13 @@ the single dispatch spine for every permute-shaped op:
 
 It also reports the predicted HBM traffic and roofline time so callers
 (and the benchmarks) can compare achieved vs predicted movement.
+
+``tuned=`` adds the optional fourth step (DESIGN.md §11): the routed
+plan's tile neighborhood is enumerated and the autotuner
+(:mod:`repro.core.tune`) selects by measurement (TPU) or by the roofline
+cost model (deterministic fallback).  The untuned default is bit-identical
+to the pre-tuner planner; a tuned plan differs only in tiles / grid
+order, never in the computed result.
 """
 
 from __future__ import annotations
@@ -28,12 +35,16 @@ from typing import Sequence
 
 import jax.numpy as jnp
 
-from repro.core import layout
+from repro.core import layout, tune
 from repro.kernels.tiling import (
+    copy_tile_candidates,
     plan_copy_tiles,
     plan_transpose_tiles,
     plan_transpose_vec_tiles,
+    transpose_tile_candidates,
+    vec_tile_candidates,
 )
+from repro.utils.roofline import movement_cost_s
 
 # v5e per-chip hardware constants (also used by utils.roofline)
 HBM_GBPS = 819.0
@@ -69,10 +80,19 @@ class RearrangePlan:
         )
 
 
-@functools.lru_cache(maxsize=4096)
-def _plan_cached(
-    shape: tuple[int, ...], dtype_name: str, perm: tuple[int, ...], grid_order: str
+def _build_plan(
+    shape: tuple[int, ...],
+    dtype_name: str,
+    perm: tuple[int, ...],
+    grid_order: str,
+    block_r: int | None = None,
+    block_c: int | None = None,
 ) -> RearrangePlan:
+    """Collapse + route one permutation and materialize the plan.
+
+    ``block_r`` / ``block_c`` override the heuristic tiles (the tuner's
+    hook); with both ``None`` this is exactly the pre-tuner planner.
+    """
     canon = layout.canonicalize(shape, perm)
     itemsize = jnp.dtype(dtype_name).itemsize
     n_elems = 1
@@ -136,6 +156,10 @@ def _plan_cached(
         )
         br, bc = tp.block_r, tp.block_c
 
+    if block_r is not None:
+        br = block_r
+    if block_c is not None:
+        bc = block_c
     return RearrangePlan(
         mode=mode,
         kernel=kernel,
@@ -151,27 +175,165 @@ def _plan_cached(
     )
 
 
+@functools.lru_cache(maxsize=4096)
+def _plan_cached(
+    shape: tuple[int, ...], dtype_name: str, perm: tuple[int, ...], grid_order: str
+) -> RearrangePlan:
+    return _build_plan(shape, dtype_name, perm, grid_order)
+
+
+def _tile_candidates(
+    plan: RearrangePlan, shape: tuple, dtype_name: str, grid_order: str
+) -> list[tune.Candidate]:
+    """Enumerate the tuner's search space around one routed plan: the tile
+    neighborhood (heuristic first) and, on the ``reorder_nd`` routes, both
+    grid-walk orders.  Cost scores include the padded-block traffic and
+    grid-step count so the model can separate candidates that move the
+    same useful bytes at different granularity."""
+    itemsize = jnp.dtype(dtype_name).itemsize
+    n_elems = 1
+    for s in shape:
+        n_elems *= int(s)
+    cands: list[tune.Candidate] = []
+
+    def add(br: int, bc: int, go: str, padded_elems: int, steps: int) -> None:
+        label = f"br{br}_bc{bc}_{go}"
+        if any(c.label == label for c in cands):
+            return
+        cands.append(
+            tune.Candidate(
+                label=label,
+                params=(("block_r", br), ("block_c", bc), ("grid_order", go)),
+                cost_s=movement_cost_s(2 * padded_elems * itemsize, steps),
+            )
+        )
+
+    if plan.mode == "transpose":
+        b, r, c, v = plan.exec_shape
+        if v > 1:
+            for vp in vec_tile_candidates(r, c, v, dtype_name):
+                padded = (
+                    b
+                    * (vp.grid_r * vp.block_r)
+                    * (vp.grid_c * vp.block_c)
+                    * (vp.grid_v * vp.block_v)
+                )
+                add(vp.block_r, vp.block_c, grid_order,
+                    padded, b * vp.grid_r * vp.grid_c * vp.grid_v)
+        else:
+            for tp in transpose_tile_candidates(r, c, dtype_name):
+                padded = b * (tp.grid_r * tp.block_r) * (tp.grid_c * tp.block_c)
+                add(tp.block_r, tp.block_c, grid_order,
+                    padded, b * tp.grid_r * tp.grid_c)
+    else:  # copy / reorder: reorder_nd kernel, both grid-walk orders
+        enum = (
+            copy_tile_candidates if plan.mode == "copy" else transpose_tile_candidates
+        )
+        r, c = _movement_plane(plan)
+        batch = max(n_elems // max(r * c, 1), 1)
+        for go in (grid_order, "in" if grid_order == "out" else "out"):
+            for tp in enum(r, c, dtype_name):
+                padded = batch * (tp.grid_r * tp.block_r) * (tp.grid_c * tp.block_c)
+                add(tp.block_r, tp.block_c, go, padded, batch * tp.grid_r * tp.grid_c)
+    return cands
+
+
+def _movement_plane(plan: RearrangePlan) -> tuple[int, int]:
+    """The (rows, cols) plane the routed kernel tiles (canonical axes)."""
+    canon = layout.canonicalize(plan.canonical_shape, plan.canonical_perm)
+    return (
+        plan.canonical_shape[canon.rows_axis],
+        plan.canonical_shape[canon.cols_axis],
+    )
+
+
+def _runner_factory(shape: tuple, dtype_name: str, perm: tuple, grid_order: str):
+    """Measured-mode runner: execute one candidate plan on a deterministic
+    sample array (jitted, device-synced by the tuner's timing loop)."""
+
+    def factory(cand: tune.Candidate):
+        import jax
+
+        from repro.kernels import ops  # lazy: ops imports this module
+
+        d = cand.param_dict()
+        plan = _build_plan(
+            shape, dtype_name, perm, d["grid_order"],
+            block_r=d["block_r"], block_c=d["block_c"],
+        )
+        x = tune.sample_array(shape, dtype_name)
+        fn = jax.jit(lambda a: ops.apply_plan(a, plan))
+        return lambda: fn(x)
+
+    return factory
+
+
+@functools.lru_cache(maxsize=4096)
+def _plan_tuned_cached(
+    shape: tuple[int, ...],
+    dtype_name: str,
+    perm: tuple[int, ...],
+    grid_order: str,
+    mode: str,
+) -> RearrangePlan:
+    base = _plan_cached(shape, dtype_name, perm, grid_order)
+    if base.mode == "identity":
+        return base  # nothing to tune: no data moves
+    cands = _tile_candidates(base, shape, dtype_name, grid_order)
+    choice = tune.select(
+        "rearrange",
+        f"shape={shape}|dtype={dtype_name}|perm={perm}|go={grid_order}",
+        cands,
+        _runner_factory(shape, dtype_name, perm, grid_order),
+        mode=mode,
+    )
+    d = choice.param_dict()
+    if (
+        d["block_r"] == base.block_r
+        and d["block_c"] == base.block_c
+        and d["grid_order"] == base.grid_order
+    ):
+        return base  # heuristic won: tuned and untuned plans are the SAME object
+    return _build_plan(
+        shape, dtype_name, perm, d["grid_order"],
+        block_r=d["block_r"], block_c=d["block_c"],
+    )
+
+
 def plan_rearrange(
     shape: Sequence[int],
     dtype,
     perm: Sequence[int],
     *,
     grid_order: str = "out",
+    tuned: bool | None = None,
 ) -> RearrangePlan:
-    """Plan (and cache) the movement for ``transpose(x, perm)``."""
+    """Plan (and cache) the movement for ``transpose(x, perm)``.
+
+    ``tuned=None`` (default) resolves from ``REPRO_TUNE`` — off unless the
+    variable opts in, so default plans are bit-identical to the pre-tuner
+    engine.  ``tuned=True`` routes through the autotuner (DESIGN.md §11):
+    the tile neighborhood is measured (TPU) or cost-scored (elsewhere) and
+    the winner is cached with the same lru identity guarantees.
+    """
     perm_t = tuple(int(p) for p in perm)
     if sorted(perm_t) != list(range(len(shape))):
         raise ValueError(f"bad perm {perm_t} for rank {len(shape)}")
     if grid_order not in ("in", "out"):
         raise ValueError(f"grid_order must be 'in' or 'out', got {grid_order!r}")
-    return _plan_cached(
-        tuple(int(s) for s in shape),
-        jnp.dtype(dtype).name,
-        perm_t,
-        grid_order,
-    )
+    if tuned is None:
+        tuned = tune.tune_default()
+    key = (tuple(int(s) for s in shape), jnp.dtype(dtype).name, perm_t, grid_order)
+    if not tuned:
+        return _plan_cached(*key)
+    return _plan_tuned_cached(*key, tune.resolve_mode())
 
 
 def plan_cache_info():
     """Expose the memo stats (tests / benchmarks)."""
     return _plan_cached.cache_info()
+
+
+def tuned_plan_cache_info():
+    """Expose the tuned-path memo stats (tests / benchmarks)."""
+    return _plan_tuned_cached.cache_info()

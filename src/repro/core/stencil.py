@@ -27,10 +27,12 @@ from typing import Callable, Sequence
 import jax
 import jax.numpy as jnp
 
+from repro.core import tune
 from repro.core.plan import HBM_GBPS
 from repro.kernels import ops, ref
 from repro.kernels import stencil2d as st_k
-from repro.kernels.tiling import cdiv, round_up, sublanes
+from repro.kernels.tiling import cdiv, neighborhood, round_up, sublanes
+from repro.utils.roofline import movement_cost_s
 
 Array = jax.Array
 
@@ -150,14 +152,20 @@ def _stage_exec(desc) -> tuple[Callable, int]:
     return functor, int(radius)
 
 
-@functools.lru_cache(maxsize=1024)
-def _plan_cached(
+def _build_plan(
     shape: tuple[int, int],
     dtype_name: str,
     stages: tuple,
     boundary: str,
     has_aux: bool,
+    block_rows: int | None = None,
 ) -> StencilPlan:
+    """Route one stencil program and materialize the plan.
+
+    ``block_rows`` overrides the heuristic row-panel height (the tuner's
+    hook; an illegal override raises so the tuner can skip the candidate);
+    with ``None`` this is exactly the pre-tuner planner.
+    """
     H, W = shape
     itemsize = jnp.dtype(dtype_name).itemsize
     stages_exec = tuple(_stage_exec(d) for d in stages)
@@ -178,10 +186,16 @@ def _plan_cached(
     mode = "reference"
     if n > 0 and all(col_ok(r) for r in radii):
         try:
-            br, rp, _ = st_k.pick_panel(H, W, dtype_name, R, boundary)
+            br, rp, _ = st_k.pick_panel(
+                H, W, dtype_name, R, boundary, block_rows=block_rows
+            )
             mode = "fused"
         except ValueError:
+            if block_rows is not None:
+                raise  # the tuner asked for an illegal panel: skip candidate
             br = rp = 0
+    elif block_rows is not None:
+        raise ValueError("no fused path to tune for this shape/boundary")
     grid = cdiv(H, br) if br else 0
 
     # cost model: useful traffic is one read + one write of the grid; the
@@ -214,6 +228,111 @@ def _plan_cached(
         / (HBM_GBPS * 1e9),
         stages_exec=stages_exec,
     )
+
+
+@functools.lru_cache(maxsize=1024)
+def _plan_cached(
+    shape: tuple[int, int],
+    dtype_name: str,
+    stages: tuple,
+    boundary: str,
+    has_aux: bool,
+) -> StencilPlan:
+    return _build_plan(shape, dtype_name, stages, boundary, has_aux)
+
+
+def _stage_key(stages: tuple) -> tuple[str, bool]:
+    """A stable string for the stage descriptors plus whether it is stable
+    across processes (opaque Python functors are not — their plans tune
+    in-memory but are never persisted to the disk cache)."""
+    parts, stable = [], True
+    for d in stages:
+        if d[0] == "linear":
+            parts.append(f"lin{d[1]}{d[2]}")
+        else:
+            parts.append(f"functor@r{d[2]}")
+            stable = False
+    return ";".join(parts), stable
+
+
+def _candidates(
+    base: StencilPlan, shape: tuple, dtype_name: str, stages: tuple, has_aux: bool
+) -> list[tune.Candidate]:
+    """The stencil engine's search space: the row-panel neighborhood of
+    the fused kernel, heuristic panel first.  The fused/per-sweep *mode*
+    is deliberately not a candidate — per-sweep execution matches fused to
+    tolerance, not bit-exactly, and tuning must never change results."""
+    H, W = shape
+    sl = sublanes(dtype_name)
+    cands, seen = [], set()
+    for br in neighborhood(base.block_rows, sl, H):
+        if br in seen:
+            continue
+        seen.add(br)
+        try:
+            cp = _build_plan(shape, dtype_name, stages, base.boundary, has_aux, br)
+        except ValueError:
+            continue
+        cands.append(
+            tune.Candidate(
+                label=f"panel{br}",
+                params=(("block_rows", br),),
+                cost_s=movement_cost_s(cp.bytes_moved, cp.grid),
+            )
+        )
+    return cands
+
+
+def _runner_factory(
+    shape: tuple, dtype_name: str, stages: tuple, boundary: str, has_aux: bool
+):
+    """Measured-mode runner: run the fused pipeline at one candidate panel
+    height on a deterministic sample grid."""
+
+    def factory(cand: tune.Candidate):
+        plan = _build_plan(
+            shape, dtype_name, stages, boundary, has_aux,
+            cand.param_dict()["block_rows"],
+        )
+        x = tune.sample_array(shape, dtype_name)
+        aux = jnp.ones_like(x) if has_aux else None
+        fn = jax.jit(
+            lambda a: ops.stencil_program(
+                a, plan.stages_exec, boundary=boundary,
+                block_rows=plan.block_rows or None, aux=aux, fused=True,
+            )
+        )
+        return lambda: fn(x)
+
+    return factory
+
+
+@functools.lru_cache(maxsize=1024)
+def _plan_tuned_cached(
+    shape: tuple[int, int],
+    dtype_name: str,
+    stages: tuple,
+    boundary: str,
+    has_aux: bool,
+    mode: str,
+) -> StencilPlan:
+    base = _plan_cached(shape, dtype_name, stages, boundary, has_aux)
+    if base.mode != "fused":
+        return base  # reference route / empty grid: nothing to tune
+    stage_key, stable = _stage_key(stages)
+    choice = tune.select(
+        "stencil",
+        f"shape={shape}|dtype={dtype_name}|stages={stage_key}"
+        f"|b={boundary}|aux={has_aux}",
+        _candidates(base, shape, dtype_name, stages, has_aux),
+        _runner_factory(shape, dtype_name, stages, boundary, has_aux),
+        mode=mode,
+        persist=stable,
+    )
+    br = choice.param_dict()["block_rows"]
+    if br == base.block_rows:
+        return base  # heuristic won: tuned and untuned plans are the SAME object
+    return _build_plan(shape, dtype_name, stages, boundary, has_aux, br)
 
 
 @dataclass(frozen=True)
@@ -260,15 +379,18 @@ class StencilProgram:
 
     def compile(
         self, shape: Sequence[int], dtype, *, boundary: str = "zero",
-        has_aux: bool = False,
+        has_aux: bool = False, tuned: bool | None = None,
     ) -> StencilPlan:
         """Plan (and cache) the lowering of this program for a grid.
 
         Repeated calls with equal arguments return the *identical*
         :class:`StencilPlan` object (lru cache keyed on shape, dtype, the
-        stage descriptors, boundary, and aux-presence).
+        stage descriptors, boundary, and aux-presence).  ``tuned=None``
+        resolves from ``REPRO_TUNE``; ``tuned=True`` searches the row-panel
+        neighborhood through the autotuner (DESIGN.md §11).
         """
-        return plan_stencil(shape, dtype, self.stages, boundary, has_aux)
+        return plan_stencil(shape, dtype, self.stages, boundary, has_aux,
+                            tuned=tuned)
 
     def shard(self, x: Array, *, mesh, axis: str, boundary: str = "zero") -> Array:
         """Run the program on a row-sharded grid with halo exchange.
@@ -337,21 +459,29 @@ def plan_stencil(
     stages: tuple,
     boundary: str = "zero",
     has_aux: bool = False,
+    *,
+    tuned: bool | None = None,
 ) -> StencilPlan:
     """Plan (and cache) the lowering of stage descriptors for a grid.
 
     The program-facing wrapper is :meth:`StencilProgram.compile`; this
     entry point exists for benchmarks and tests that build descriptor
-    tuples directly.
+    tuples directly.  ``tuned=None`` resolves from ``REPRO_TUNE``;
+    ``tuned=True`` searches the fused kernel's row-panel neighborhood
+    through the autotuner (DESIGN.md §11) — panel geometry only, so a
+    tuned program's output stays bit-identical to the untuned one.
     """
     if boundary not in ref.BOUNDARY_PAD_MODES:
         raise ValueError(f"unknown boundary {boundary!r}; want one of {BOUNDARIES}")
     shape_t = tuple(int(s) for s in shape)
     if len(shape_t) != 2:
         raise ValueError(f"stencil plans want 2-D shapes, got {shape_t}")
-    return _plan_cached(
-        shape_t, jnp.dtype(dtype).name, tuple(stages), boundary, bool(has_aux)
-    )
+    if tuned is None:
+        tuned = tune.tune_default()
+    key = (shape_t, jnp.dtype(dtype).name, tuple(stages), boundary, bool(has_aux))
+    if not tuned:
+        return _plan_cached(*key)
+    return _plan_tuned_cached(*key, tune.resolve_mode())
 
 
 def stencil_plan_cache_info():

@@ -89,6 +89,8 @@ def apply_index_plan(
 
       noop           -> zeros (empty table / empty rows), no kernel
       gather         -> blocked masked gather (run-detected block copies)
+                        — or the seed rowwise kernel when the tuner
+                        selected that engine (unmasked gathers only)
       scatter        -> the same gather through the inverted index table
                         (an int32 table op; unmapped rows stay zero)
       gather_combine -> fused gather + weighted combine (needs ``gates``)
@@ -96,6 +98,8 @@ def apply_index_plan(
     interp = _interpret()
     if plan.mode == "noop":
         return jnp.zeros((plan.n_out, x.shape[1]), x.dtype)
+    if plan.mode == "rowwise":
+        return gs_k.gather_rows(x, idx, interpret=interp)
     if plan.semantics == "scatter":
         inv = jnp.full((plan.n_out,), -1, jnp.int32).at[idx].set(
             jnp.arange(plan.n_src, dtype=jnp.int32), mode="drop"

@@ -151,3 +151,115 @@ def plan_copy_tiles(rows: int, cols: int, dtype, *, target_rows: int = 512) -> T
 def force_interpret() -> bool:
     """Tests set REPRO_PALLAS_INTERPRET=1 to run kernels on CPU."""
     return os.environ.get("REPRO_PALLAS_INTERPRET", "0") == "1"
+
+
+# ---------------------------------------------------------------------------
+# candidate enumeration (the autotuner's search space, DESIGN.md §11)
+#
+# Every planner's heuristic tile is one point in a small neighborhood of
+# legal configurations; the tuner (core/tune.py) measures or cost-scores
+# that neighborhood instead of trusting the one-shot formula.  Enumeration
+# lives here so the legality rules (alignment, VMEM budget) stay next to
+# the heuristics they relax.
+# ---------------------------------------------------------------------------
+
+
+def neighborhood(value: int, mult: int, dim: int) -> tuple[int, ...]:
+    """The ±1 multiplier-step neighborhood of a block size over an axis of
+    extent ``dim``: the heuristic ``value`` first (always kept verbatim, so
+    the tuner's tie-break recovers the untuned plan exactly), then its
+    halving and doubling, each aligned to ``mult`` and clamped to
+    ``[mult, round_up(dim, mult)]``.  Axes at or below one ``mult`` tile
+    have no neighbors (the heuristic already takes the whole axis)."""
+    out = [value]
+    if dim > mult:
+        hi = round_up(dim, mult)
+        for v in (value // 2, value * 2):
+            v = max(mult, min(round_up(v, mult), hi))
+            if v not in out:
+                out.append(v)
+    return tuple(out)
+
+
+def transpose_tile_candidates(rows: int, cols: int, dtype) -> tuple[TilePlan, ...]:
+    """Tile candidates for the transpose plane: the heuristic
+    (:func:`plan_transpose_tiles`) first, then its (block_r, block_c)
+    neighborhood, keeping only VMEM-legal combinations (both the load and
+    store blocks double-buffered)."""
+    itemsize = jnp.dtype(dtype).itemsize
+    base = plan_transpose_tiles(rows, cols, dtype)
+    mr = LANES if rows >= LANES else sublanes(dtype)
+    mc = LANES if cols >= LANES else sublanes(dtype)
+    out = []
+    for br in neighborhood(base.block_r, mr, rows):
+        for bc in neighborhood(base.block_c, mc, cols):
+            if 4 * br * bc * itemsize > VMEM_BUDGET * 2:
+                continue
+            tp = TilePlan(br, bc, cdiv(rows, br), cdiv(cols, bc))
+            if tp not in out:
+                out.append(tp)
+    return tuple(out) or (base,)
+
+
+def vec_tile_candidates(
+    rows: int, cols: int, vec: int, dtype
+) -> tuple[VecTilePlan, ...]:
+    """Tile candidates for the V-deep transpose plane: the heuristic
+    (:func:`plan_transpose_vec_tiles`) first, then the (block_r, block_c)
+    neighborhood at the heuristic's ``block_v`` (the lane-axis depth is
+    fixed by payload contiguity, so only the plane tile is searched)."""
+    itemsize = jnp.dtype(dtype).itemsize
+    sl = sublanes(dtype)
+    base = plan_transpose_vec_tiles(rows, cols, vec, dtype)
+    budget_elems = max(VMEM_BUDGET // (2 * itemsize), 1)
+    plane_budget = max(budget_elems // max(base.block_v, 1), 1)
+    out = []
+    for br in neighborhood(base.block_r, sl, rows):
+        for bc in neighborhood(base.block_c, sl, cols):
+            if br * bc > plane_budget:
+                continue
+            vp = VecTilePlan(
+                br, bc, base.block_v, cdiv(rows, br), cdiv(cols, bc),
+                cdiv(vec, base.block_v),
+            )
+            if vp not in out:
+                out.append(vp)
+    return tuple(out) or (base,)
+
+
+def copy_tile_candidates(rows: int, cols: int, dtype) -> tuple[TilePlan, ...]:
+    """Tile candidates for the streaming-copy plane: columns stay full
+    width (the long contiguous DMAs are the point of the route), only the
+    row-block height is searched around :func:`plan_copy_tiles`."""
+    itemsize = jnp.dtype(dtype).itemsize
+    sl = sublanes(dtype)
+    base = plan_copy_tiles(rows, cols, dtype)
+    max_elems = VMEM_BUDGET // (2 * itemsize)
+    out = []
+    for br in neighborhood(base.block_r, sl, rows):
+        br = min(br, rows)
+        if br * base.block_c > max_elems:
+            continue
+        tp = TilePlan(br, base.block_c, cdiv(rows, br), cdiv(cols, base.block_c))
+        if tp not in out:
+            out.append(tp)
+    return tuple(out) or (base,)
+
+
+def row_block_candidates(
+    base: int, n_out: int, row_bytes: int, dtype, top_k: int = 1
+) -> tuple[int, ...]:
+    """Row-block candidates for the index-set kernels: the IndexPlan
+    heuristic height (``base``) first, then its ±1 step neighborhood, all
+    sublane aligned and inside the double-buffered VMEM budget (divided by
+    the combine fan-in ``top_k``, which keeps k source rows resident)."""
+    sl = sublanes(dtype)
+    br_budget = max(VMEM_BUDGET // (2 * max(row_bytes, 1) * top_k), 1)
+    hi = min(max(br_budget // sl * sl, sl), max(n_out, 1))
+    seen, out = set(), []
+    for b in neighborhood(base, sl, hi):
+        b = min(b, n_out)
+        if b > 0 and b not in seen:
+            seen.add(b)
+            out.append(b)
+    return tuple(out)

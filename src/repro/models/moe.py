@@ -151,7 +151,7 @@ def moe_dense(p: dict, cfg, x: Array, *, capacity: int | None = None) -> tuple[A
     gates = gates.reshape(b, s, k)
     idx = idx.reshape(b, s, k)
 
-    cap = capacity or max(1, int(mc.capacity_factor * s * k / e))
+    cap = capacity or default_capacity(cfg, s)
     cap = min(cap, s * k)
     onehot = jax.nn.one_hot(idx, e, dtype=jnp.int32)            # (B, S, k, E)
     flat = onehot.reshape(b, s * k, e)
@@ -208,7 +208,7 @@ def moe_sort(
     gates, idx, aux = _router(p, mc, h2)
 
     e, k = mc.n_experts, mc.top_k
-    cap = capacity or max(1, int(mc.capacity_factor * t * k / e))
+    cap = capacity or default_capacity(cfg, t)
 
     if engine == "rowwise":
         keep, slot, token_of = _slot_assignment(idx, t, e, cap, k)
@@ -279,7 +279,7 @@ def moe_sort_ep(
     e, k = mc.n_experts, mc.top_k
     p_sz = int(mesh.shape[axis])
     tl = t // p_sz
-    cap = capacity or max(1, int(mc.capacity_factor * tl * k / e))
+    cap = capacity or default_capacity(cfg, tl)
     plan = dist_plan.plan_dist_moe(
         dist_plan.mesh_key(mesh), axis, t, d, e, cap, k, x.dtype
     )
@@ -330,6 +330,17 @@ def moe_apply(p: dict, cfg, x: Array, *, capacity: int | None = None) -> tuple[A
     if cfg.moe.dispatch == "sort":
         return moe_sort(p, cfg, x, capacity=capacity)
     return moe_dense(p, cfg, x, capacity=capacity)
+
+
+def default_capacity(cfg, tokens: int) -> int:
+    """Per-expert buffer size for ``tokens`` routed tokens: the GShard
+    formula ``max(1, int(capacity_factor * tokens * top_k / n_experts))``.
+    The single definition every caller shares — the MoE layers here, the
+    benchmarks, and the ``repro.tune`` pre-warm CLI, whose whole point is
+    warming the exact plan keys (``n_out = n_experts * capacity``) that
+    serving will look up."""
+    mc = cfg.moe
+    return max(1, int(mc.capacity_factor * tokens * mc.top_k / mc.n_experts))
 
 
 def decode_capacity(cfg, batch: int) -> int:

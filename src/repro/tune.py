@@ -1,0 +1,141 @@
+"""Pre-warm the autotuning cache for the shapes in ``repro.configs``
+(DESIGN.md §11).
+
+Steady-state serving/training pays zero tuning overhead when the
+persistent cache (``REPRO_TUNE_CACHE``, default
+``~/.cache/repro/tune.json``) already holds a measured winner for every
+plan key the model will hit.  This CLI walks the architecture registry
+and tunes, per config:
+
+* the split-heads / merge-heads rearrangement family ((B, S, H, hd) and
+  its inverse — the hottest permutes in the codebase, DESIGN.md §3/§7);
+* the MoE dispatch + combine index plans at the config's expert count,
+  fan-in and capacity (§4), for MoE architectures;
+* a ``repeat(k)`` Jacobi stencil program on the requested grid (§9) —
+  stencils are workload-shaped rather than config-shaped, so the grid is
+  a flag, not a registry lookup.
+
+Usage::
+
+    PYTHONPATH=src python -m repro.tune                    # all archs
+    PYTHONPATH=src python -m repro.tune --arch qwen2-7b --batch 8 --seq 2048
+    PYTHONPATH=src python -m repro.tune --mode cost        # deterministic
+    PYTHONPATH=src python -m repro.tune --list             # show the cache
+
+``--mode auto`` (default) measures on TPU and cost-scores elsewhere —
+exactly what a tuned planner does at run time, so the warmed winners are
+the winners serving will reuse.
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+
+
+def _warm_config(name: str, batch: int, seq: int) -> list[str]:
+    """Tune every plan key one architecture exercises; returns report lines."""
+    from repro import configs
+    from repro.core.index_plan import plan_index_op
+    from repro.core.plan import plan_rearrange
+
+    cfg = configs.get_config(name)
+    dt = cfg.np_dtype
+    hd = cfg.head_dim_resolved
+    lines = []
+
+    split = (batch, seq, cfg.n_heads, hd)
+    merge = (batch, cfg.n_heads, seq, hd)
+    for tag, shape in (("split_heads", split), ("merge_heads", merge)):
+        plan = plan_rearrange(shape, dt, (0, 2, 1, 3), tuned=True)
+        lines.append(
+            f"{name}: {tag} {shape} -> tiles=({plan.block_r},{plan.block_c}) "
+            f"[{plan.mode}]"
+        )
+
+    if cfg.moe is not None:
+        from repro.models.moe import default_capacity
+
+        t = batch * seq
+        e, k = cfg.moe.n_experts, cfg.moe.top_k
+        cap = default_capacity(cfg, t)
+        disp = plan_index_op(
+            (t, cfg.d_model), dt, e * cap, "gather", masked=True, tuned=True
+        )
+        comb = plan_index_op(
+            (e * cap, cfg.d_model), dt, t, "gather_combine",
+            masked=True, top_k=k, tuned=True,
+        )
+        lines.append(f"{name}: moe dispatch blocks={disp.grid}x{disp.block_rows}")
+        lines.append(f"{name}: moe combine  blocks={comb.grid}x{comb.block_rows}")
+    return lines
+
+
+def _warm_stencil(grid: int, sweeps: int) -> list[str]:
+    """Tune the reference Jacobi program on an NxN grid."""
+    import jax.numpy as jnp
+
+    from repro.core import stencil as st
+
+    jacobi = st.Stencil(((1, 0), (-1, 0), (0, 1), (0, -1)), (0.25,) * 4)
+    plan = jacobi.repeat(sweeps).compile((grid, grid), jnp.float32, tuned=True)
+    return [
+        f"stencil: jacobi repeat({sweeps}) {grid}x{grid} -> "
+        f"panel={plan.block_rows} [{plan.mode}]"
+    ]
+
+
+def main(argv: list[str] | None = None) -> int:
+    """Entry point for ``python -m repro.tune``."""
+    from repro import configs
+
+    ap = argparse.ArgumentParser(
+        prog="repro.tune", description="pre-warm the autotuning cache"
+    )
+    ap.add_argument("--arch", action="append", default=None,
+                    help="architecture id (repeatable; default: all)")
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=512)
+    ap.add_argument("--grid", type=int, default=2048,
+                    help="stencil grid side (0 skips the stencil warm)")
+    ap.add_argument("--sweeps", type=int, default=8)
+    ap.add_argument("--mode", choices=("auto", "measure", "cost"), default="auto",
+                    help="selection backend (auto = measure on TPU, cost elsewhere)")
+    ap.add_argument("--cache", default=None, help="override REPRO_TUNE_CACHE")
+    ap.add_argument("--list", action="store_true",
+                    help="print the cache contents and exit")
+    args = ap.parse_args(argv)
+
+    if args.cache:
+        os.environ["REPRO_TUNE_CACHE"] = args.cache
+    os.environ["REPRO_TUNE"] = {"auto": "on"}.get(args.mode, args.mode)
+
+    from repro.core import tune as tune_core
+
+    if args.list:
+        doc = tune_core.load_cache()
+        print(json.dumps(doc, indent=1, sort_keys=True))
+        return 0
+
+    names = args.arch or list(configs.ARCH_IDS)
+    for name in names:
+        for line in _warm_config(name, args.batch, args.seq):
+            print(line)
+    if args.grid:
+        for line in _warm_stencil(args.grid, args.sweeps):
+            print(line)
+
+    doc = tune_core.load_cache()
+    mode = tune_core.resolve_mode()
+    print(
+        f"# mode={mode}; cache {tune_core.cache_path()} now holds "
+        f"{len(doc['entries'])} entries"
+        + ("" if mode == "measure" else
+           " (cost mode is deterministic and not persisted)")
+    )
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -16,6 +16,38 @@ PEAK_BF16_FLOPS = 197e12  # per chip
 HBM_BW = 819e9  # bytes/s per chip
 ICI_BW = 50e9  # bytes/s per link
 
+# fixed-cost terms for the tuner's candidate scoring (DESIGN.md §11).
+# Rough v5e figures: one pallas_call dispatch, the per-grid-step pipeline
+# bubble (DMA issue + semaphore wait that double buffering cannot hide at
+# the panel boundary), and the ICI latency of launching one collective.
+KERNEL_LAUNCH_S = 2e-6
+GRID_STEP_S = 2e-7
+COLLECTIVE_LAUNCH_S = 5e-6
+
+
+def movement_cost_s(
+    bytes_moved: float,
+    grid_steps: int = 1,
+    *,
+    wire_bytes: float = 0.0,
+    collectives: int = 0,
+) -> float:
+    """Cost-model score (seconds) for one movement candidate: HBM traffic
+    at bandwidth plus the fixed per-kernel/per-grid-step overheads, plus
+    the wire term for distributed candidates.  This is the deterministic
+    fallback the autotuner (``core/tune.py``) ranks candidates with when
+    measured timing is unavailable (``REPRO_TUNE=off``, interpret mode, or
+    no runner) — unlike the pure ``bytes / bw`` roofline it separates
+    candidates that move the same useful bytes with different padding
+    waste or grid granularity."""
+    return (
+        bytes_moved / HBM_BW
+        + KERNEL_LAUNCH_S
+        + grid_steps * GRID_STEP_S
+        + wire_bytes / ICI_BW
+        + collectives * COLLECTIVE_LAUNCH_S
+    )
+
 
 @dataclass
 class Roofline:

@@ -480,6 +480,39 @@ def test_moe_ep_interpret_blocked_kernels(pallas_interpret):
     np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
 
 
+@needs_mesh
+@pytest.mark.parametrize("dtype", DTYPES)
+def test_tuned_dist_plans_bit_identical(monkeypatch, dtype):
+    """§11 autotuning on the dist engine: the tuner may swap strategies
+    (all_to_all vs replicate, halo vs replicate), but every strategy is
+    movement-only, so tuned execution stays bit-identical to untuned."""
+    monkeypatch.setenv("REPRO_TUNE", "off")
+    mesh = make_mesh((1, 4))
+    x = rand((8, 37, 12), dtype)
+    xs = jax.device_put(x, NamedSharding(mesh, P("b")))
+    out_spec = P(None, None, "b")
+    want = dp.shard_permute(
+        xs, (1, 0, 2), mesh=mesh, in_spec=P("b"), out_spec=out_spec
+    )
+    got = dp.shard_permute(
+        xs, (1, 0, 2), mesh=mesh, in_spec=P("b"), out_spec=out_spec, tuned=True
+    )
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+    g = rand((32, 18), dtype)
+    gs = jax.device_put(g, NamedSharding(mesh, P("b", None)))
+    prog = JACOBI.repeat(6)
+    want_s = prog(g, boundary="zero")
+    got_s = dp.shard_stencil(
+        prog, gs, mesh=mesh, axis="b", boundary="zero", tuned=True
+    )
+    tuned_plan = dp.plan_dist_stencil(
+        dp.mesh_key(mesh), "b", g.shape, g.dtype, prog.stages, "zero", tuned=True
+    )
+    assert tuned_plan.strategy in ("halo", "replicate")
+    np.testing.assert_array_equal(np.asarray(got_s), np.asarray(want_s))
+
+
 # ---------------------------------------------------------------------------
 # the launcher: run the whole file on 8 forced host devices
 # ---------------------------------------------------------------------------

@@ -1,0 +1,245 @@
+"""Benchmark-regression gate (``make bench-check``).
+
+Three checks, in order:
+
+1. **Structure** — every committed ``BENCH_*.json`` parses, carries a
+   positive ``memcpy_gbps`` baseline, and every row has the harness
+   schema (``op/us_per_call/gbps/frac_memcpy/suite``).  A PR that breaks
+   the record stream fails here.
+2. **Measured-path ratios** — the plan-engine comparisons the committed
+   files exist to track (fused vs per-sweep stencil, IndexPlan vs seed
+   rowwise MoE dispatch, engine vs seed head permutes, halo-blocked vs
+   per-sweep distributed stencil) must stay above a tolerance-banded
+   floor.  The floors sit well below the currently-measured ratios, so
+   noise passes but a silent engine regression (or a hand-edited JSON)
+   exits nonzero.
+3. **Smoke replay** (skippable with ``--no-smoke``) — re-runs the whole
+   harness via ``python -m benchmarks.run --smoke`` (tiny deterministic
+   shapes) into a temp dir, then checks the fresh records against the
+   committed files' structure: same suites, same row schema.  Fresh
+   ratios are evaluated against the same floors but only *warn* — smoke
+   shapes are interpret-scale and noisy — and everything lands in the
+   ``--out`` diff artifact for the (non-blocking) CI job to upload.
+
+Usage::
+
+    PYTHONPATH=src python tools/check_bench.py [--root .] [--no-smoke]
+        [--out bench-check.json]
+
+Exit status: nonzero on any structure failure or committed-ratio
+regression; smoke warnings never fail the gate.
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import pathlib
+import re
+import subprocess
+import sys
+import tempfile
+
+ROW_SCHEMA = ("op", "us_per_call", "gbps", "frac_memcpy", "suite")
+
+BENCH_FILES = (
+    "BENCH_rearrange.json",
+    "BENCH_stencil.json",
+    "BENCH_moe.json",
+    "BENCH_dist.json",
+)
+
+# (file, numerator op regex, denominator op regex, floor): the measured
+# GB/s ratio num/den must stay >= floor.  Floors are tolerance-banded —
+# set well under the committed ratios (shown) so run-to-run noise passes
+# while a regression of the engine (or an injected edit) fails.
+RATIO_POLICIES = (
+    # fused temporal blocking vs per-sweep, kernel-measured (~3.6x committed)
+    ("BENCH_stencil.json",
+     r"jacobi\d+_interp_fused_k\d+", r"jacobi\d+_interp_per_sweep_k\d+", 1.2),
+    # IndexPlan blocked+fused dispatch vs seed rowwise (~16x committed)
+    ("BENCH_moe.json",
+     r"moe_dispatch_sort_fused", r"moe_dispatch_sort_rowwise", 2.0),
+    # plan-engine head permutes vs seed generic kernel (~1.9x / ~55x)
+    ("BENCH_rearrange.json",
+     r"split_heads_engine", r"split_heads_seed_generic", 1.0),
+    ("BENCH_rearrange.json",
+     r"merge_heads_engine", r"merge_heads_seed_generic", 1.0),
+    # halo-blocked distributed stencil vs per-sweep exchanges (~3x committed)
+    ("BENCH_dist.json",
+     r"stencil_halo_blocked_k\d+", r"stencil_per_sweep_k\d+", 1.0),
+)
+
+
+def load(path: pathlib.Path) -> tuple[dict | None, list[str]]:
+    """Parse one benchmark JSON; (doc, errors)."""
+    try:
+        doc = json.loads(path.read_text())
+    except FileNotFoundError:
+        return None, [f"{path.name}: missing"]
+    except ValueError as e:
+        return None, [f"{path.name}: unparseable ({e})"]
+    errs = []
+    if not isinstance(doc.get("memcpy_gbps"), (int, float)) or doc["memcpy_gbps"] <= 0:
+        errs.append(f"{path.name}: memcpy_gbps baseline missing or non-positive")
+    rows = doc.get("rows")
+    if not isinstance(rows, list) or not rows:
+        errs.append(f"{path.name}: no rows")
+        return doc, errs
+    for i, r in enumerate(rows):
+        missing = [k for k in ROW_SCHEMA if k not in r]
+        if missing:
+            errs.append(f"{path.name}: row {i} ({r.get('op', '?')}) missing {missing}")
+        elif not isinstance(r["us_per_call"], (int, float)) or r["us_per_call"] <= 0:
+            errs.append(f"{path.name}: row {i} ({r['op']}) bad us_per_call")
+    return doc, errs
+
+
+def _find(rows: list[dict], pattern: str) -> dict | None:
+    rx = re.compile(pattern + r"\Z")
+    for r in rows:
+        if rx.match(str(r.get("op", ""))):
+            return r
+    return None
+
+
+def check_ratios(docs: dict[str, dict]) -> tuple[list[str], list[dict]]:
+    """Evaluate every ratio policy against loaded docs; (errors, report)."""
+    errs, report = [], []
+    for fname, num_rx, den_rx, floor in RATIO_POLICIES:
+        doc = docs.get(fname)
+        if doc is None:
+            continue
+        rows = doc.get("rows") or []
+        num, den = _find(rows, num_rx), _find(rows, den_rx)
+        if num is None or den is None:
+            errs.append(f"{fname}: ratio rows missing ({num_rx} / {den_rx})")
+            continue
+        if not isinstance(num.get("gbps"), (int, float)):
+            errs.append(f"{fname}: {num['op']} has no GB/s field")
+            continue
+        if not den.get("gbps"):
+            errs.append(f"{fname}: {den['op']} has zero GB/s")
+            continue
+        ratio = num["gbps"] / den["gbps"]
+        report.append({
+            "file": fname, "num": num["op"], "den": den["op"],
+            "ratio": round(ratio, 3), "floor": floor, "ok": ratio >= floor,
+        })
+        if ratio < floor:
+            errs.append(
+                f"{fname}: {num['op']} / {den['op']} = {ratio:.2f} "
+                f"below floor {floor} — measured-path regression"
+            )
+    return errs, report
+
+
+def run_smoke(root: pathlib.Path, tmp: pathlib.Path) -> tuple[dict[str, dict], list[str]]:
+    """Replay the harness in --smoke mode; returns (fresh docs, errors)."""
+    paths = {f: tmp / f for f in BENCH_FILES}
+    cmd = [
+        sys.executable, "-m", "benchmarks.run", "--smoke",
+        "--json", str(paths["BENCH_rearrange.json"]),
+        "--json-stencil", str(paths["BENCH_stencil.json"]),
+        "--json-moe", str(paths["BENCH_moe.json"]),
+        "--json-dist", str(paths["BENCH_dist.json"]),
+    ]
+    r = subprocess.run(
+        cmd, cwd=root, capture_output=True, text=True, timeout=3600
+    )
+    if r.returncode != 0:
+        return {}, [
+            "smoke run failed "
+            f"(exit {r.returncode}):\n{r.stdout[-1000:]}\n{r.stderr[-2000:]}"
+        ]
+    docs, errs = {}, []
+    for fname, p in paths.items():
+        doc, ferrs = load(p)
+        errs.extend(f"smoke {e}" for e in ferrs)
+        if doc is not None:
+            docs[fname] = doc
+    return docs, errs
+
+
+def compare_structure(
+    committed: dict[str, dict], fresh: dict[str, dict]
+) -> list[str]:
+    """The fresh smoke records must cover the committed files' shape: same
+    suite sets per file (the harness still runs everything) and no row
+    schema drift."""
+    errs = []
+    for fname, cdoc in committed.items():
+        fdoc = fresh.get(fname)
+        if fdoc is None:
+            errs.append(f"smoke produced no {fname}")
+            continue
+        csuites = {r.get("suite") for r in cdoc.get("rows", [])}
+        fsuites = {r.get("suite") for r in fdoc.get("rows", [])}
+        if not csuites <= fsuites:
+            errs.append(
+                f"{fname}: smoke run lost suites {sorted(csuites - fsuites)}"
+            )
+    return errs
+
+
+def main(argv: list[str] | None = None) -> int:
+    """Entry point; returns the process exit status."""
+    ap = argparse.ArgumentParser(prog="check_bench")
+    ap.add_argument("--root", default=".", help="repo root with BENCH_*.json")
+    ap.add_argument("--no-smoke", action="store_true",
+                    help="skip the smoke replay (structure + ratios only)")
+    ap.add_argument("--out", default="", help="write the diff artifact here")
+    args = ap.parse_args(argv)
+    root = pathlib.Path(args.root)
+
+    failures: list[str] = []
+    warnings: list[str] = []
+    docs: dict[str, dict] = {}
+    for fname in BENCH_FILES:
+        doc, errs = load(root / fname)
+        failures.extend(errs)
+        if doc is not None:
+            docs[fname] = doc
+
+    ratio_errs, ratio_report = check_ratios(docs)
+    failures.extend(ratio_errs)
+
+    smoke_report: list[dict] = []
+    if not args.no_smoke:
+        with tempfile.TemporaryDirectory(prefix="bench-smoke-") as td:
+            fresh, errs = run_smoke(root, pathlib.Path(td))
+            failures.extend(errs)
+            if fresh:
+                failures.extend(compare_structure(docs, fresh))
+                smoke_errs, smoke_report = check_ratios(fresh)
+                # fresh interpret-scale timings only warn — the committed
+                # trajectory is the gate, the smoke run proves the harness
+                warnings.extend(f"smoke: {e}" for e in smoke_errs)
+
+    artifact = {
+        "failures": failures,
+        "warnings": warnings,
+        "committed_ratios": ratio_report,
+        "smoke_ratios": smoke_report,
+    }
+    if args.out:
+        pathlib.Path(args.out).write_text(json.dumps(artifact, indent=1) + "\n")
+
+    for w in warnings:
+        print(f"WARN: {w}")
+    for f in failures:
+        print(f"FAIL: {f}")
+    for r in ratio_report:
+        print(
+            f"ratio {r['file']}: {r['num']}/{r['den']} = {r['ratio']} "
+            f"(floor {r['floor']}) {'ok' if r['ok'] else 'REGRESSED'}"
+        )
+    if failures:
+        print(f"bench-check: {len(failures)} failure(s)")
+        return 1
+    print("bench-check: ok")
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())
