@@ -30,8 +30,8 @@
 
 PYTHONPATH := src
 
-.PHONY: test test-interpret test-dist bench bench-smoke bench-check \
-	bench-moe bench-dist lint check docs-check
+.PHONY: test test-interpret test-dist test-serve bench bench-smoke bench-check \
+	bench-moe bench-dist bench-serve lint check docs-check
 
 docs-check:
 	python tools/check_docstrings.py
@@ -59,9 +59,15 @@ bench-moe:
 bench-dist:
 	PYTHONPATH=$(PYTHONPATH) python -m benchmarks.run --only dist --json ''
 
+bench-serve:
+	PYTHONPATH=$(PYTHONPATH) python -m benchmarks.run --only serve --json ''
+
 test-dist:
 	XLA_FLAGS=--xla_force_host_platform_device_count=8 REPRO_DIST_CHILD=1 \
 		PYTHONPATH=$(PYTHONPATH) python -m pytest -x -q tests/test_dist_plan.py
+
+test-serve:
+	PYTHONPATH=$(PYTHONPATH) python -m pytest -x -q tests/test_serve_engine.py
 
 lint:
 	python -m compileall -q src tests benchmarks examples

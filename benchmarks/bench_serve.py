@@ -1,0 +1,237 @@
+"""Beyond-paper: the serving engine's measured hot paths (DESIGN §12).
+
+Three comparisons at equal semantics:
+
+* **split-KV vs one-shot decode attention** — `kernels.flash.flash_decode`
+  (two-stage mid-softmax reduce, per-slot lengths) against the rectangular
+  one-shot flash kernel at sq=1 and the jnp oracle.  Off-TPU both kernels
+  run through the Pallas interpreter, where runtime tracks grid steps —
+  the same proxy the other suites use; the split-KV grid streams K/V once
+  per *KV* head instead of once per query head, so the GQA group factor
+  shows up directly.  Both kernel rows use the same algorithmic byte
+  count, so the GB/s ratio in ``tools/check_bench.py`` is a pure time
+  ratio (floor: split-KV >= 1.0x one-shot).
+* **ragged vs bucket admission** — one packed `prefill_ragged` wave
+  against the seed's per-request left-padded bucket prefills for the same
+  prompts.
+* **the multi-tenant trace** — a seeded synthetic trace (mixed prompt
+  lengths, Poisson arrivals in engine steps) through the continuous
+  batching engine, ragged+chunked vs bucket mode, reporting tokens/s and
+  p50/p99 per-token latency (inter-token gap a client of a slot
+  observes).  Rows land in ``BENCH_serve.json`` (see benchmarks/run.py).
+"""
+
+from __future__ import annotations
+
+import time
+from collections import deque
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import row, smoke, time_fn
+from repro import configs
+from repro.kernels import flash
+from repro.models import attention
+from repro.models import transformer as tf
+from repro.serve.engine import Engine, Request
+
+
+def _decode_rows(out: list[str]) -> None:
+    """Kernel-level decode comparison: oracle vs one-shot vs split-KV."""
+    b, hq, hkv, s, d = (2, 8, 2, 256, 32) if smoke() else (4, 16, 4, 1024, 64)
+    key = jax.random.PRNGKey(0)
+    kq, kk, kv_ = jax.random.split(key, 3)
+    q = jax.random.normal(kq, (b, hq, 1, d), jnp.float32)
+    k = jax.random.normal(kk, (b, hkv, s, d), jnp.float32)
+    v = jax.random.normal(kv_, (b, hkv, s, d), jnp.float32)
+    lens = jnp.full((b,), s, jnp.int32)
+    # one algorithmic byte count for every row: K/V streamed once + q/o
+    nbytes = 4 * (2 * b * hkv * s * d + 2 * b * hq * d)
+    plan = flash.plan_flash_decode(b, hq, hkv, s, d, jnp.float32)
+    out.append(f"# decode shapes b={b} hq={hq} hkv={hkv} s={s} d={d}")
+    out.append(f"# split-KV plan: {plan.describe()}")
+
+    oracle = jax.jit(
+        lambda a, c, w: attention.decode_attention(a, c, w, length=s, engine="oneshot")
+    )
+    t_or = time_fn(oracle, q, k, v)
+    out.append(
+        row("decode_oneshot_oracle", t_or, nbytes,
+            plan_mode="jnp_masked", measured="xla_oracle")
+    )
+
+    interp = jax.default_backend() != "tpu"
+    oneshot = jax.jit(
+        lambda a, c, w: flash.flash_attention(a, c, w, causal=False, interpret=interp)
+    )
+    t_one = time_fn(oneshot, q, k, v)
+    out.append(
+        row("decode_oneshot_interp", t_one, nbytes, "[seed one-shot kernel, sq=1]",
+            plan_mode="oneshot", measured="pallas")
+    )
+
+    splitkv = jax.jit(
+        lambda a, c, w: flash.flash_decode(a, c, w, lengths=lens, interpret=interp)
+    )
+    t_sp = time_fn(splitkv, q, k, v)
+    out.append(
+        row("decode_splitkv_interp", t_sp, nbytes,
+            f"[{plan.num_splits} splits x bk={plan.block_k}, "
+            f"{t_one/t_sp:.2f}x vs one-shot]",
+            plan_mode="splitkv", measured="pallas",
+            num_splits=plan.num_splits, block_k=plan.block_k,
+            improvement_vs_oneshot=round(t_one / t_sp, 3),
+            plan_bytes=flash.decode_dma_bytes(
+                b, hq, hkv, s, d, 4,
+                num_splits=plan.num_splits, block_k=plan.block_k,
+            ))
+    )
+
+
+def _prompts(rng: np.random.Generator, cfg, n: int) -> list[np.ndarray]:
+    """Mixed-length synthetic prompts (the multi-tenant part of the trace)."""
+    # hi keeps bucket-mode viable: round_up(hi, bucket) + max_new < s_max,
+    # so both engine modes emit every token and the traces stay comparable
+    lo, hi = (4, 36) if smoke() else (8, 90)
+    return [
+        rng.integers(0, cfg.vocab, int(rng.integers(lo, hi))).astype(np.int32)
+        for _ in range(n)
+    ]
+
+
+def _kv_step_bytes(cfg, slots: int, s_max: int) -> int:
+    """Approximate per-decode-step KV traffic: every attention layer
+    streams each slot's full ring once."""
+    n_attn = sum(count * len(unit) for unit, count in cfg.decoder_plan())
+    item = jnp.dtype(cfg.np_dtype).itemsize
+    return n_attn * 2 * slots * cfg.n_kv_heads * s_max * cfg.head_dim * item
+
+
+def _run_trace(engine: Engine, reqs: list[Request], arrive: list[int]):
+    """Drive one trace: admit at each request's arrival step, step the
+    engine, collect per-iteration wall times and token counts."""
+    pending: deque[Request] = deque()
+    lat: list[float] = []
+    nxt = 0
+    step = 0
+    t0 = time.perf_counter()
+    while nxt < len(reqs) or pending or any(r is not None for r in engine.live):
+        it0 = time.perf_counter()
+        while nxt < len(reqs) and arrive[nxt] <= step:
+            pending.append(reqs[nxt])
+            nxt += 1
+        before = sum(len(r.out) for r in reqs)
+        n_free = len(engine.free_slots())
+        if pending and n_free:
+            wave = [pending.popleft() for _ in range(min(n_free, len(pending)))]
+            engine.admit_batch(wave)
+        engine.step()
+        new = sum(len(r.out) for r in reqs) - before
+        lat.extend([time.perf_counter() - it0] * new)
+        step += 1
+    total = time.perf_counter() - t0
+    return total, step, lat
+
+
+def _trace_rows(out: list[str]) -> None:
+    """Engine-level trace: ragged+chunked vs bucket continuous batching."""
+    cfg = configs.get_config("qwen2-7b-smoke")
+    params = tf.init_params(jax.random.PRNGKey(0), cfg)
+    n_req, slots, s_max, chunk = (6, 3, 64, 16) if smoke() else (16, 4, 128, 32)
+    rng = np.random.default_rng(0)
+    prompts = _prompts(rng, cfg, n_req)
+    # Poisson arrivals: exponential inter-arrival gaps, in engine steps
+    gaps = rng.exponential(scale=2.0, size=n_req)
+    arrive = np.floor(np.cumsum(gaps)).astype(int).tolist()
+    max_new = 4 if smoke() else 12
+    out.append(
+        f"# trace: {n_req} reqs, prompts {min(map(len, prompts))}.."
+        f"{max(map(len, prompts))} toks, arrivals {arrive}, max_new={max_new}"
+    )
+    step_bytes = _kv_step_bytes(cfg, slots, s_max)
+
+    for name, mode, ch in (
+        ("serve_trace_ragged_chunked", "ragged", chunk),
+        ("serve_trace_ragged", "ragged", None),
+        ("serve_trace_bucket", "bucket", None),
+    ):
+        engine = Engine(
+            cfg, params, batch_slots=slots, s_max=s_max,
+            prompt_bucket=16 if smoke() else 32, prefill_mode=mode, chunk=ch,
+        )
+
+        def fresh():
+            return [
+                Request(rid=i, prompt=p, max_new=max_new)
+                for i, p in enumerate(prompts)
+            ]
+
+        _run_trace(engine, fresh(), arrive)  # warm the jit caches
+        engine.reset()
+        reqs = fresh()
+        total, steps, lat = _run_trace(engine, reqs, arrive)
+        toks = sum(len(r.out) for r in reqs)
+        lat_ms = np.sort(np.asarray(lat)) * 1e3
+        p50 = float(np.percentile(lat_ms, 50))
+        p99 = float(np.percentile(lat_ms, 99))
+        out.append(
+            row(name, total, steps * step_bytes,
+                f"[{toks} toks, {toks/total:.1f} tok/s, "
+                f"p50 {p50:.1f}ms p99 {p99:.1f}ms, {steps} steps]",
+                plan_mode=mode, measured="engine", tokens=toks,
+                engine_steps=steps, chunk=ch if ch else 0,
+                tokens_per_s=round(toks / total, 2),
+                p50_ms=round(p50, 3), p99_ms=round(p99, 3))
+        )
+
+
+def _admission_rows(out: list[str]) -> None:
+    """One packed ragged admission wave vs per-request bucket prefills."""
+    cfg = configs.get_config("qwen2-7b-smoke")
+    params = tf.init_params(jax.random.PRNGKey(1), cfg)
+    n, s_max = (3, 64) if smoke() else (4, 128)
+    rng = np.random.default_rng(1)
+    prompts = _prompts(rng, cfg, n)
+    total_toks = sum(len(p) for p in prompts)
+    n_attn = sum(count * len(unit) for unit, count in cfg.decoder_plan())
+    item = jnp.dtype(cfg.np_dtype).itemsize
+    nbytes = n_attn * 2 * cfg.n_kv_heads * total_toks * cfg.head_dim * item
+
+    times = {}
+    for name, mode in (
+        ("prefill_ragged_wave", "ragged"),
+        ("prefill_bucket_wave", "bucket"),
+    ):
+        engine = Engine(
+            cfg, params, batch_slots=n, s_max=s_max, prompt_bucket=16,
+            prefill_mode=mode,
+        )
+
+        def wave(e=engine):
+            e.reset()
+            e.admit_batch(
+                [Request(rid=i, prompt=p, max_new=2) for i, p in enumerate(prompts)]
+            )
+            jax.block_until_ready(e.cache)
+
+        wave()  # compile
+        t = time_fn(wave)
+        times[name] = t
+        note = ""
+        if name == "prefill_bucket_wave":
+            note = f"[{t/times['prefill_ragged_wave']:.2f}x slower than ragged]"
+        out.append(
+            row(name, t, nbytes, note, plan_mode=mode, measured="engine",
+                prompts=n, prompt_tokens=total_toks)
+        )
+
+
+def run():
+    """Suite entry point (benchmarks.run)."""
+    out: list[str] = []
+    _decode_rows(out)
+    _admission_rows(out)
+    _trace_rows(out)
+    return out

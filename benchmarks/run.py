@@ -9,9 +9,12 @@ achieved GB/s, fraction of memcpy, plan mode) so the perf trajectory is
 tracked across PRs.  The stencil suite's rows (fused vs per-sweep plan
 engine comparison) are additionally written to ``BENCH_stencil.json``,
 the MoE dispatch suite's rows (dense vs rowwise-sort vs fused-sort
-IndexPlan comparison) to ``BENCH_moe.json``, and the mesh-aware suite's
+IndexPlan comparison) to ``BENCH_moe.json``, the mesh-aware suite's
 rows (DistPlan strategies with bytes-on-wire accounting, run on 8 forced
-host devices in a subprocess) to ``BENCH_dist.json``.
+host devices in a subprocess) to ``BENCH_dist.json``, and the serving
+suite's rows (split-KV vs one-shot decode, ragged vs bucket prefill, the
+multi-tenant trace with tokens/s and p50/p99 per-token latency) to
+``BENCH_serve.json``.
 
 The head-permute and stencil suites also report the autotuned plan next
 to the heuristic one (``plan_source`` field, DESIGN.md §11) so tuned and
@@ -42,6 +45,7 @@ SUITES = [
     ("stencil", "benchmarks.bench_stencil", "Fig. 2/Table 4 2D FD stencil"),
     ("moe_dispatch", "benchmarks.bench_moe_dispatch", "beyond-paper MoE dispatch"),
     ("dist", "benchmarks.bench_dist", "beyond-paper mesh-aware engines (8 fake devices)"),
+    ("serve", "benchmarks.bench_serve", "beyond-paper serving engine (split-KV decode, ragged prefill)"),
     ("roofline", "benchmarks.bench_roofline", "dry-run roofline table"),
 ]
 
@@ -73,6 +77,11 @@ def main() -> None:
         default=None,
         help="output path for the mesh-aware suite's strategy-comparison rows",
     )
+    ap.add_argument(
+        "--json-serve",
+        default=None,
+        help="output path for the serving suite's decode/prefill/trace rows",
+    )
     args = ap.parse_args()
     only = set(args.only.split(",")) if args.only else None
     if args.smoke:
@@ -83,6 +92,7 @@ def main() -> None:
         "json_stencil": "BENCH_stencil.json",
         "json_moe": "BENCH_moe.json",
         "json_dist": "BENCH_dist.json",
+        "json_serve": "BENCH_serve.json",
     }
     for attr, path in defaults.items():
         if getattr(args, attr) is None:
@@ -123,6 +133,7 @@ def main() -> None:
         ("stencil", args.json_stencil),
         ("moe_dispatch", args.json_moe),
         ("dist", args.json_dist),
+        ("serve", args.json_serve),
     ):
         suite_rows = [r for r in common.RECORDS if r.get("suite") == suite]
         if suite_rows and path:

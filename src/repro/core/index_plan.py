@@ -31,10 +31,11 @@ sentinel-row concatenates.
 from __future__ import annotations
 
 import functools
-from dataclasses import dataclass
+from dataclasses import dataclass, field
 from typing import Sequence
 
 import jax.numpy as jnp
+import numpy as np
 
 from repro.core import tune
 from repro.core.plan import HBM_GBPS
@@ -47,8 +48,12 @@ from repro.kernels.tiling import (
 )
 from repro.utils.roofline import movement_cost_s
 
-#: semantics accepted by :func:`plan_index_op`.
-SEMANTICS = ("gather", "scatter", "gather_combine")
+#: semantics accepted by :func:`plan_index_op`.  ``ragged_rows`` is the
+#: serving engine's pack/unpack route (DESIGN.md §12): a masked gather
+#: whose table maps packed-prefill rows into per-slot ring rows — each
+#: sequence's rows form a contiguous run, so the blocked kernel's run
+#: detection collapses them into strided block copies.
+SEMANTICS = ("gather", "scatter", "gather_combine", "ragged_rows")
 
 #: row-block target: enough rows per grid step to amortize per-step
 #: overhead without starving the double-buffered VMEM budget.
@@ -305,7 +310,9 @@ def plan_index_op(
 
     ``src_shape`` is the 2-D source array shape ``(n_src, C)``; ``n_out``
     the number of output rows (for ``scatter`` that is the *destination*
-    row count); ``semantics`` one of ``gather | scatter | gather_combine``.
+    row count); ``semantics`` one of ``gather | scatter | gather_combine |
+    ragged_rows`` (the last is the serving engine's masked unpack gather
+    over a :func:`ragged_layout`, DESIGN.md §12).
     ``masked`` enables sentinel handling (negative index -> zero row) and
     ``top_k`` is the combine fan-in.
 
@@ -324,6 +331,11 @@ def plan_index_op(
     """
     if semantics not in SEMANTICS:
         raise ValueError(f"unknown semantics {semantics!r}; want one of {SEMANTICS}")
+    if semantics == "ragged_rows" and not masked:
+        raise ValueError(
+            "ragged_rows plans are always masked: rows past each sequence's "
+            "length are sentinels (-1) that zero-fill the ring tail"
+        )
     if len(src_shape) != 2:
         raise ValueError(f"index plans want 2-D sources, got {tuple(src_shape)}")
     if n_out < 0:
@@ -350,3 +362,88 @@ def plan_index_op(
 def index_plan_cache_info():
     """Expose the plan-memo stats (tests / benchmarks)."""
     return _plan_cached.cache_info()
+
+
+# ---------------------------------------------------------------------------
+# ragged packed layout (qo_indptr) — the serving engine's prefill route
+# ---------------------------------------------------------------------------
+
+
+@dataclass(frozen=True)
+class RaggedLayout:
+    """``qo_indptr``-style packed layout for one ragged prefill batch
+    (DESIGN.md §12): n variable-length prompts concatenated along one
+    packed token axis, bucket-padded to ``t_pad``.
+
+    The layout carries the masking tables the packed forward needs
+    (``seg_ids``/``positions`` drive the block-diagonal causal mask and
+    per-sequence RoPE) plus the pack/unpack geometry (``indptr``,
+    :meth:`unpack_index`) the engine's ``ragged_rows`` IndexPlan gather
+    uses to move packed KV rows into decode slots.  Zero-length sequences
+    are legal at the layout level (an empty segment, all-sentinel unpack
+    rows); admitting one is the *engine's* error.
+
+    Example::
+
+        lay = ragged_layout((3, 5), bucket=8)
+        assert lay.indptr == (0, 3, 8) and lay.t_pad == 8
+    """
+
+    lengths: tuple[int, ...]  #: per-sequence prompt lengths
+    bucket: int  #: packed-width rounding (compile-shape stability)
+    total: int  #: sum of lengths
+    t_pad: int  #: bucket-rounded packed width
+    indptr: tuple[int, ...]  #: (n+1,) prefix sums — sequence j owns rows [indptr[j], indptr[j+1])
+    seg_ids: np.ndarray = field(compare=False)  #: (t_pad,) int32 sequence id, -1 pad
+    positions: np.ndarray = field(compare=False)  #: (t_pad,) int32 within-sequence position
+    last_ix: np.ndarray = field(compare=False)  #: (n,) packed index of each sequence's last token
+
+    def unpack_index(self, n_rows: int) -> np.ndarray:
+        """The unpack gather table: (n_seq, n_rows) int32 mapping slot row
+        s of sequence j to its packed row, ``-1`` (zero-fill sentinel)
+        past the sequence's length — the operand for a ``ragged_rows``
+        :func:`plan_index_op` gather."""
+        n = len(self.lengths)
+        out = np.full((n, n_rows), -1, np.int32)
+        for j, ln in enumerate(self.lengths):
+            take = min(ln, n_rows)
+            out[j, :take] = np.arange(self.indptr[j], self.indptr[j] + take)
+        return out
+
+
+@functools.lru_cache(maxsize=1024)
+def ragged_layout(lengths: tuple[int, ...], bucket: int = 64) -> RaggedLayout:
+    """Plan (and cache) the packed layout for prompts of ``lengths``.
+
+    Cached on the exact length tuple — steady-state admission waves with
+    repeating shapes pay zero planning overhead, mirroring the other plan
+    engines' memo contract."""
+    lengths = tuple(int(x) for x in lengths)
+    if not lengths:
+        raise ValueError("ragged_layout needs at least one sequence")
+    if any(x < 0 for x in lengths):
+        raise ValueError(f"negative sequence length in {lengths}")
+    if bucket < 1:
+        raise ValueError(f"bucket must be >= 1, got {bucket}")
+    total = sum(lengths)
+    t_pad = max(round_up(max(total, 1), bucket), bucket)
+    indptr = [0]
+    for ln in lengths:
+        indptr.append(indptr[-1] + ln)
+    seg = np.full((t_pad,), -1, np.int32)
+    pos = np.zeros((t_pad,), np.int32)
+    last = np.zeros((len(lengths),), np.int32)
+    for j, ln in enumerate(lengths):
+        seg[indptr[j] : indptr[j + 1]] = j
+        pos[indptr[j] : indptr[j + 1]] = np.arange(ln)
+        last[j] = max(indptr[j + 1] - 1, indptr[j])  # undefined for ln == 0
+    return RaggedLayout(
+        lengths=lengths,
+        bucket=int(bucket),
+        total=total,
+        t_pad=t_pad,
+        indptr=tuple(indptr),
+        seg_ids=seg,
+        positions=pos,
+        last_ix=last,
+    )

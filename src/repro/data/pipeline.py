@@ -23,6 +23,9 @@ import numpy as np
 
 @dataclass(frozen=True)
 class DataConfig:
+    """Stream geometry + sharding: each host reads ``batch // n_hosts``
+    rows of its own shard, addressed purely by (seed, step, host_id)."""
+
     batch: int
     seq: int
     vocab: int
@@ -39,6 +42,8 @@ class SyntheticSource:
         self.dc = dc
 
     def batch_at(self, step: int) -> dict:
+        """The (tokens, labels) batch for ``step`` — pure in (seed, step,
+        host shard); no stream state."""
         dc = self.dc
         rows = dc.batch // dc.n_hosts
         rng = np.random.Generator(
@@ -59,6 +64,8 @@ class MemmapSource:
         self.n_tokens = len(self.data)
 
     def batch_at(self, step: int) -> dict:
+        """The (tokens, labels) windows for ``step``, striding the flat
+        token file by host shard (wraps modulo the file)."""
         dc = self.dc
         rows = dc.batch // dc.n_hosts
         span = dc.seq + 1
@@ -72,6 +79,8 @@ class MemmapSource:
 
 
 def make_source(dc: DataConfig):
+    """Pick the source for ``dc``: memmap when a path is set, else
+    synthetic."""
     return MemmapSource(dc) if dc.path else SyntheticSource(dc)
 
 
@@ -100,7 +109,9 @@ class Prefetcher:
             step += 1
 
     def next(self) -> tuple[int, dict]:
+        """Block for the next (step, batch) pair in stream order."""
         return self.queue.get()
 
     def close(self):
+        """Stop the prefetch thread (idempotent)."""
         self._stop.set()

@@ -22,13 +22,14 @@ numbers (deterministic, not estimated).
 from __future__ import annotations
 
 import functools
+from dataclasses import dataclass
 
 import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
-from repro.kernels.tiling import cdiv, force_interpret
+from repro.kernels.tiling import cdiv, force_interpret, round_up
 
 NEG_INF = -1e30
 
@@ -256,3 +257,398 @@ def dma_bytes(
     kv_bytes = 2 * b * hq * nq * nk * bk * d * itemsize  # via the bh//g map
     o_bytes = b * hq * nq * bq * d * itemsize
     return q_bytes + kv_bytes + o_bytes
+
+
+# ---------------------------------------------------------------------------
+# split-KV decode attention (serving hot path, DESIGN.md §12)
+#
+# Decode reads the whole KV ring for ONE query row per head — pure memory
+# bound.  The one-shot grid serializes the S axis behind a single (m, l,
+# acc) carry; the split-KV grid partitions each slot's ring into splits
+# computed in parallel, each keeping its own running statistics, and a
+# second single-pallas_call stage folds the per-split partials with a
+# mid-softmax rescale (the `_fwd_kernel_stage2_asm` shape).  GQA packs the
+# G = Hq//Hkv query heads of one KV head into the sublane axis so K/V rows
+# stream from HBM once per KV head instead of once per query head.
+# ---------------------------------------------------------------------------
+
+
+def _decode_split_kernel(
+    nks: int, bk: int, s_max: int, hkv: int,
+    len_ref, q_ref, k_ref, v_ref, o_ref, m_out_ref, l_out_ref,
+    m_ref, l_ref, acc_ref,
+):
+    """Stage 1: one (KV-head, split, k-block) grid step of the partial
+    online softmax; per-split (m, l, acc) land in the mid arrays."""
+    bh = pl.program_id(0)
+    isp = pl.program_id(1)
+    ik = pl.program_id(2)
+    g = q_ref.shape[1]
+
+    @pl.when(ik == 0)
+    def init():
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    length = jnp.minimum(len_ref[bh // hkv], s_max)
+    start = (isp * nks + ik) * bk
+
+    @pl.when(start < length)
+    def compute():
+        q = q_ref[0]  # (G, d), pre-scaled
+        k = k_ref[0]  # (bk, d)
+        s = jax.lax.dot_general(
+            q, k, (((1,), (1,)), ((), ())), preferred_element_type=jnp.float32
+        )  # (G, bk)
+        k_pos = start + jax.lax.broadcasted_iota(jnp.int32, (g, bk), 1)
+        s = jnp.where(k_pos < length, s, NEG_INF)
+        m_prev = m_ref[...]
+        m_new = jnp.maximum(m_prev, s.max(axis=1, keepdims=True))
+        p = jnp.exp(s - m_new)
+        alpha = jnp.exp(m_prev - m_new)
+        l_ref[...] = l_ref[...] * alpha + p.sum(axis=1, keepdims=True)
+        m_ref[...] = m_new
+        # zero rows past the valid length: their logits are NEG_INF so the
+        # probabilities underflow to 0, but 0 * garbage must stay 0
+        v_rows = start + jax.lax.broadcasted_iota(jnp.int32, (bk, 1), 0)
+        v_clean = jnp.where(v_rows < length, v_ref[0], jnp.zeros((), v_ref.dtype))
+        acc_ref[...] = acc_ref[...] * alpha + jax.lax.dot_general(
+            p.astype(v_clean.dtype), v_clean, (((1,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32,
+        )
+
+    @pl.when(ik == nks - 1)
+    def finalize():
+        o_ref[0, 0] = acc_ref[...]
+        m_out_ref[0, 0] = m_ref[:, 0]
+        l_out_ref[0, 0] = l_ref[:, 0]
+
+
+def _decode_combine_kernel(ns: int, mid_o_ref, mid_m_ref, mid_l_ref, o_ref):
+    """Stage 2: fold the per-split (m, l, acc) partials with a running
+    mid-softmax rescale — the `_fwd_kernel_stage2_asm` recurrence."""
+    g, d = o_ref.shape[1], o_ref.shape[2]
+    e_max = jnp.full((g,), NEG_INF, jnp.float32)
+    e_sum = jnp.zeros((g,), jnp.float32)
+    acc = jnp.zeros((g, d), jnp.float32)
+    for i in range(ns):
+        tv = mid_o_ref[0, i]  # (G, d) unnormalized partial
+        tm = mid_m_ref[0, i]  # (G,) split max
+        tl = mid_l_ref[0, i]  # (G,) split exp-sum
+        n_e_max = jnp.maximum(tm, e_max)
+        old_scale = jnp.exp(e_max - n_e_max)
+        p = jnp.exp(tm - n_e_max)
+        acc = acc * old_scale[:, None] + p[:, None] * tv
+        e_sum = e_sum * old_scale + p * tl
+        e_max = n_e_max
+    o_ref[0] = (acc / jnp.maximum(e_sum, 1e-30)[:, None]).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("num_splits", "interpret"))
+def decode_combine(
+    mid_o: jax.Array,  # (BH, ns, G, d) float32
+    mid_m: jax.Array,  # (BH, ns, G) float32
+    mid_l: jax.Array,  # (BH, ns, G) float32
+    *,
+    num_splits: int,
+    interpret: bool | None = None,
+) -> jax.Array:
+    """The stage-2 combine as ONE ``pallas_call`` over the (BH,) grid —
+    jaxpr-assertable (tests/test_serve_engine.py) and reused verbatim by
+    :func:`flash_decode`.  Returns the normalized output (BH, G, d)."""
+    bh, ns, g, d = mid_o.shape
+    interpret = force_interpret() if interpret is None else interpret
+    return pl.pallas_call(
+        functools.partial(_decode_combine_kernel, num_splits),
+        grid=(bh,),
+        in_specs=[
+            pl.BlockSpec((1, ns, g, d), lambda i: (i, 0, 0, 0)),
+            pl.BlockSpec((1, ns, g), lambda i: (i, 0, 0)),
+            pl.BlockSpec((1, ns, g), lambda i: (i, 0, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, g, d), lambda i: (i, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((bh, g, d), mid_o.dtype),
+        interpret=interpret,
+    )(mid_o, mid_m, mid_l)
+
+
+@functools.partial(
+    jax.jit, static_argnames=("num_splits", "block_k", "interpret")
+)
+def flash_decode(
+    q: jax.Array,  # (B, Hq, 1, D)
+    k: jax.Array,  # (B, Hkv, S_max, D) ring buffer
+    v: jax.Array,
+    *,
+    lengths: jax.Array,  # (B,) int32 valid rows per slot
+    num_splits: int | None = None,
+    block_k: int | None = None,
+    interpret: bool | None = None,
+) -> jax.Array:
+    """Split-KV decode attention over per-slot ring buffers.
+
+    Each slot's KV ring is partitioned into ``num_splits`` splits computed
+    in parallel (grid axis 1), each carrying its own running (m, l, acc)
+    statistics; :func:`decode_combine` then folds the partials with a
+    mid-softmax rescale.  ``lengths`` holds the TRUE per-slot valid-row
+    counts, so a slot admitted late never attends over another slot's ring
+    tail (the Engine.step position bug this kernel replaces).  Tile
+    geometry (``num_splits`` x ``block_k``) defaults to the
+    :func:`plan_flash_decode` plan — heuristic or autotuned per
+    ``REPRO_TUNE`` (DESIGN.md §11).
+    """
+    b, hq, sq, d = q.shape
+    _, hkv, s_max, _ = k.shape
+    if sq != 1:
+        raise ValueError(f"flash_decode is single-token only, got Sq={sq}")
+    g = hq // hkv
+    if num_splits is None or block_k is None:
+        plan = plan_flash_decode(b, hq, hkv, s_max, d, q.dtype)
+        num_splits = plan.num_splits if num_splits is None else num_splits
+        block_k = plan.block_k if block_k is None else block_k
+    bk = min(block_k, s_max)
+    nkb = cdiv(s_max, bk)
+    ns = max(1, min(num_splits, nkb))
+    nks = cdiv(nkb, ns)  # k blocks per split
+    ns = cdiv(nkb, nks)  # splits actually visited
+    s_pad = ns * nks * bk
+    if s_pad != s_max:
+        k = jnp.pad(k, ((0, 0), (0, 0), (0, s_pad - s_max), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, 0), (0, s_pad - s_max), (0, 0)))
+
+    q3 = (q * (d ** -0.5)).reshape(b * hkv, g, d)
+    k3 = k.reshape(b * hkv, s_pad, d)
+    v3 = v.reshape(b * hkv, s_pad, d)
+    lens = jnp.minimum(
+        jnp.broadcast_to(jnp.asarray(lengths, jnp.int32).reshape(-1), (b,)), s_max
+    )
+
+    interpret = force_interpret() if interpret is None else interpret
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=(b * hkv, ns, nks),
+        in_specs=[
+            pl.BlockSpec((1, g, d), lambda bh, isp, ik, lens: (bh, 0, 0)),
+            pl.BlockSpec(
+                (1, bk, d), lambda bh, isp, ik, lens: (bh, isp * nks + ik, 0)
+            ),
+            pl.BlockSpec(
+                (1, bk, d), lambda bh, isp, ik, lens: (bh, isp * nks + ik, 0)
+            ),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, 1, g, d), lambda bh, isp, ik, lens: (bh, isp, 0, 0)),
+            pl.BlockSpec((1, 1, g), lambda bh, isp, ik, lens: (bh, isp, 0)),
+            pl.BlockSpec((1, 1, g), lambda bh, isp, ik, lens: (bh, isp, 0)),
+        ],
+        scratch_shapes=[
+            pltpu.VMEM((g, 1), jnp.float32),
+            pltpu.VMEM((g, 1), jnp.float32),
+            pltpu.VMEM((g, d), jnp.float32),
+        ],
+    )
+    mid_o, mid_m, mid_l = pl.pallas_call(
+        functools.partial(_decode_split_kernel, nks, bk, s_max, hkv),
+        grid_spec=grid_spec,
+        out_shape=[
+            jax.ShapeDtypeStruct((b * hkv, ns, g, d), jnp.float32),
+            jax.ShapeDtypeStruct((b * hkv, ns, g), jnp.float32),
+            jax.ShapeDtypeStruct((b * hkv, ns, g), jnp.float32),
+        ],
+        interpret=interpret,
+    )(lens, q3, k3, v3)
+    out = decode_combine(mid_o, mid_m, mid_l, num_splits=ns, interpret=interpret)
+    return out.reshape(b, hq, 1, d).astype(q.dtype)
+
+
+@dataclass(frozen=True)
+class DecodePlan:
+    """Cached split-KV tile decision for one decode-attention shape.
+
+    Mirrors the other plan engines (DESIGN.md §3/§4/§11): frozen, memoized
+    on the static shape key, and carrying the deterministic traffic
+    accounting so benchmarks compare achieved vs predicted movement.
+    """
+
+    num_splits: int  # parallel KV splits per slot (stage-1 grid axis)
+    block_k: int  # KV rows per grid step inside a split
+    grid: tuple  # (B*Hkv, num_splits, k-blocks-per-split)
+    bytes_moved: int  # stage-1 + stage-2 HBM traffic
+    roofline_s: float  # bytes / HBM bandwidth (one chip)
+
+    def describe(self) -> str:
+        """One-line human-readable summary (benchmarks / debugging)."""
+        return (
+            f"flash_decode: splits={self.num_splits} block_k={self.block_k} "
+            f"grid={self.grid} {self.bytes_moved/1e6:.2f} MB moved, "
+            f"roofline {self.roofline_s*1e6:.1f} us"
+        )
+
+
+def decode_dma_bytes(
+    b: int, hq: int, hkv: int, s_max: int, d: int, itemsize: int,
+    *, num_splits: int, block_k: int,
+) -> int:
+    """Exact HBM traffic of the two-stage split-KV schedule: K/V rows once
+    per (split, k-block) visit, the G query rows re-read per grid step,
+    the fp32 mid partials written by stage 1 and re-read by stage 2, and
+    the final output rows."""
+    g = hq // hkv
+    bk = min(block_k, s_max)
+    nkb = cdiv(s_max, bk)
+    ns = max(1, min(num_splits, nkb))
+    nks = cdiv(nkb, ns)
+    ns = cdiv(nkb, nks)
+    steps = b * hkv * ns * nks
+    kv_bytes = 2 * steps * bk * d * itemsize
+    q_bytes = steps * g * d * itemsize
+    mid_bytes = 2 * b * hkv * ns * g * (d + 2) * 4  # written then re-read
+    o_bytes = b * hq * d * itemsize
+    return kv_bytes + q_bytes + mid_bytes + o_bytes
+
+
+def _decode_candidates(b, hq, hkv, s_max, d, itemsize):
+    """The split-KV search space: the heuristic (num_splits, block_k) tile
+    first (tie-break contract), then the split-count and block neighbors."""
+    from repro.core import tune
+    from repro.utils.roofline import movement_cost_s
+
+    base_ns, base_bk = _decode_heuristic(s_max)
+    pairs = [(base_ns, base_bk)]
+    for ns in (base_ns // 2, base_ns * 2, 1):
+        for bk in (base_bk // 2, base_bk, base_bk * 2):
+            ns_c = max(1, min(ns, cdiv(s_max, 8)))
+            bk_c = max(8, min(round_up(bk, 8), round_up(s_max, 8)))
+            if (ns_c, bk_c) not in pairs:
+                pairs.append((ns_c, bk_c))
+    cands = []
+    for ns, bk in pairs:
+        nkb = cdiv(s_max, bk)
+        nks = cdiv(nkb, min(ns, nkb))
+        ns_eff = cdiv(nkb, nks)
+        steps = b * hkv * ns_eff * nks + b * hkv  # stage 1 + stage 2
+        cands.append(
+            tune.Candidate(
+                label=f"ns{ns}_bk{bk}",
+                params=(("num_splits", ns), ("block_k", bk)),
+                cost_s=movement_cost_s(
+                    decode_dma_bytes(
+                        b, hq, hkv, s_max, d, itemsize,
+                        num_splits=ns, block_k=bk,
+                    ),
+                    steps,
+                ),
+            )
+        )
+    return cands
+
+
+def _decode_heuristic(s_max: int) -> tuple[int, int]:
+    """Default tile: ~512-row splits (enough rows to amortize the per-step
+    overhead) in 256-row k-blocks, clamped to the ring size."""
+    bk = min(256, round_up(s_max, 8))
+    ns = max(1, min(cdiv(s_max, 512), 8, cdiv(s_max, bk)))
+    return ns, bk
+
+
+def _decode_runner_factory(b, hq, hkv, s_max, d, dtype_name):
+    """Measured-mode runner: execute one candidate tile on deterministic
+    sample tensors (full-length slots — the steady-state decode shape)."""
+
+    def factory(cand):
+        from repro.core import tune
+
+        p = cand.param_dict()
+        q = tune.sample_array((b, hq, 1, d), dtype_name)
+        k = tune.sample_array((b, hkv, s_max, d), dtype_name)
+        v = tune.sample_array((b, hkv, s_max, d), dtype_name)
+        lens = jnp.full((b,), s_max, jnp.int32)
+        fn = jax.jit(
+            lambda q, k, v, lens: flash_decode(
+                q, k, v, lengths=lens,
+                num_splits=p["num_splits"], block_k=p["block_k"],
+            )
+        )
+        return lambda: fn(q, k, v, lens)
+
+    return factory
+
+
+@functools.lru_cache(maxsize=1024)
+def _decode_plan_cached(
+    b: int, hq: int, hkv: int, s_max: int, d: int, dtype_name: str
+) -> DecodePlan:
+    ns, bk = _decode_heuristic(s_max)
+    return _decode_mk(b, hq, hkv, s_max, d, dtype_name, ns, bk)
+
+
+def _decode_mk(b, hq, hkv, s_max, d, dtype_name, ns, bk) -> DecodePlan:
+    itemsize = jnp.dtype(dtype_name).itemsize
+    bk = min(bk, round_up(s_max, 8))
+    nkb = cdiv(s_max, bk)
+    ns = max(1, min(ns, nkb))
+    nks = cdiv(nkb, ns)
+    ns = cdiv(nkb, nks)
+    bytes_moved = decode_dma_bytes(
+        b, hq, hkv, s_max, d, itemsize, num_splits=ns, block_k=bk
+    )
+    from repro.core.plan import HBM_GBPS
+
+    return DecodePlan(
+        num_splits=ns,
+        block_k=bk,
+        grid=(b * hkv, ns, nks),
+        bytes_moved=bytes_moved,
+        roofline_s=bytes_moved / (HBM_GBPS * 1e9),
+    )
+
+
+@functools.lru_cache(maxsize=1024)
+def _decode_plan_tuned_cached(
+    b: int, hq: int, hkv: int, s_max: int, d: int, dtype_name: str, mode: str
+) -> DecodePlan:
+    from repro.core import tune
+
+    base = _decode_plan_cached(b, hq, hkv, s_max, d, dtype_name)
+    itemsize = jnp.dtype(dtype_name).itemsize
+    choice = tune.select(
+        "flash_decode",
+        f"b={b}|hq={hq}|hkv={hkv}|s={s_max}|d={d}|dtype={dtype_name}",
+        _decode_candidates(b, hq, hkv, s_max, d, itemsize),
+        _decode_runner_factory(b, hq, hkv, s_max, d, dtype_name),
+        mode=mode,
+    )
+    p = choice.param_dict()
+    if (p["num_splits"], p["block_k"]) == (base.num_splits, base.block_k):
+        return base  # heuristic won: tuned plan IS the untuned plan object
+    return _decode_mk(
+        b, hq, hkv, s_max, d, dtype_name, p["num_splits"], p["block_k"]
+    )
+
+
+def plan_flash_decode(
+    b: int, hq: int, hkv: int, s_max: int, d: int, dtype,
+    *, tuned: bool | None = None,
+) -> DecodePlan:
+    """Plan (and cache) the split-KV decode tile for one attention shape.
+
+    ``tuned=None`` resolves from ``REPRO_TUNE`` like every other plan
+    engine: off -> the deterministic heuristic; on -> the (num_splits,
+    block_k) neighborhood is measured on TPU or cost-scored elsewhere via
+    ``core.tune.select`` with the same lru identity guarantees (repeated
+    calls return the *identical* plan object).
+
+    Example::
+
+        plan = plan_flash_decode(8, 32, 8, 4096, 128, jnp.bfloat16)
+        print(plan.describe())
+    """
+    from repro.core import tune
+
+    if tuned is None:
+        tuned = tune.tune_default()
+    key = (int(b), int(hq), int(hkv), int(s_max), int(d), jnp.dtype(dtype).name)
+    if not tuned:
+        return _decode_plan_cached(*key)
+    return _decode_plan_tuned_cached(*key, tune.resolve_mode())

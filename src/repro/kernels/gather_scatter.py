@@ -219,6 +219,13 @@ def gather_rows_blocked(
     detection), and sentinel rows are zero-filled in-kernel — no caller-
     side sentinel-row concatenates.  Planned by
     :func:`repro.core.index_plan.plan_index_op`.
+
+    This one kernel carries three plan semantics: masked ``gather``,
+    ``scatter`` (via the inverted table), and the serving engine's
+    ``ragged_rows`` unpack (DESIGN.md §12), where per-sequence packed
+    rows are contiguous runs — the run-detected strided-copy fast path —
+    and the ``-1`` tail sentinels zero-fill each KV ring beyond its
+    prompt length.
     """
     if x.ndim != 2 or idx.ndim != 1:
         raise ValueError(

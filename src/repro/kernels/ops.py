@@ -94,6 +94,9 @@ def apply_index_plan(
       scatter        -> the same gather through the inverted index table
                         (an int32 table op; unmapped rows stay zero)
       gather_combine -> fused gather + weighted combine (needs ``gates``)
+      ragged_rows    -> the masked gather route above; -1 sentinels zero
+                        the tail rows (the serving engine's ragged-prefill
+                        unpack, DESIGN.md §12)
     """
     interp = _interpret()
     if plan.mode == "noop":

@@ -1,0 +1,91 @@
+"""XLA inference-flag presets for the serving engine (DESIGN.md §12).
+
+Serving is latency-bound and memory-bound — a different compiler regime
+from the training launchers — so the engine ships a curated TPU flag
+preset in the spirit of production LLM servers (saxml's
+``llm_xla_flags.py``): async collectives for the sharded decode path,
+memory-bound-loop and prefetch-order tuning for the KV ring traffic, and
+a raised scoped-VMEM ceiling for the flash kernels.
+
+Opt-in, mirroring ``REPRO_TUNE``: set ``REPRO_SERVE_FLAGS=1`` (or call
+:func:`apply_serve_flags` before JAX initializes) and the preset is
+appended to ``XLA_FLAGS``.  Flags already present in the environment win
+— the preset never overrides an explicit user choice.  The preset is
+TPU-only: non-TPU XLA builds abort on unknown flags, so
+:func:`apply_serve_flags` no-ops unless :func:`tpu_present` says a TPU
+runtime is plausibly loaded; :func:`serve_flags` still reports the
+preset so tests can assert its contents anywhere.
+"""
+
+from __future__ import annotations
+
+import glob
+import importlib.util
+import os
+
+#: The serving preset.  Keys are plain XLA flag names (no ``--``); all
+#: values are strings, matching how XLA parses ``XLA_FLAGS``.
+SERVE_XLA_TPU_FLAGS: dict[str, str] = {
+    # latency: overlap collectives with compute on the sharded decode path
+    "xla_enable_async_collective_permute": "true",
+    "xla_jf_spmd_threshold_for_windowed_einsum_mib": "0",
+    "xla_tpu_spmd_unroll_windowed_einsum": "true",
+    # bandwidth: keep the memory-bound decode loop's prefetches ordered
+    "xla_tpu_enforce_prefetch_fifo_order": "true",
+    "xla_tpu_memory_bound_loop_optimizer_options": "enabled:true",
+    "xla_tpu_nd_short_transfer_max_chunks": "2048",
+    # headroom for the split-KV flash kernels' VMEM scratch
+    "xla_tpu_scoped_vmem_limit_kib": "28672",
+    # inference graphs re-trace per shape: avoid layout churn
+    "xla_tpu_perform_spmd_cse_prevention": "true",
+    "xla_tpu_rwb_fusion": "false",
+}
+
+_ENV = "REPRO_SERVE_FLAGS"
+_ON_VALUES = ("1", "on", "true")
+
+
+def tpu_present() -> bool:
+    """Best-effort TPU detection that is safe BEFORE ``import jax``.
+
+    An explicit ``JAX_PLATFORMS``/``JAX_PLATFORM_NAME`` decides outright
+    (a ``libtpu`` wheel is often installed on CPU-only CI images, so the
+    wheel alone proves nothing).  Otherwise require both the wheel and a
+    TPU device node (``/dev/accel*`` or ``/dev/vfio`` on TPU VMs)."""
+    plat = os.environ.get("JAX_PLATFORMS") or os.environ.get("JAX_PLATFORM_NAME")
+    if plat:
+        return "tpu" in plat.lower()
+    if importlib.util.find_spec("libtpu") is None:
+        return False
+    return bool(glob.glob("/dev/accel*")) or os.path.exists("/dev/vfio")
+
+
+def serve_flags() -> dict[str, str]:
+    """The preset as a dict (a copy — mutate freely)."""
+    return dict(SERVE_XLA_TPU_FLAGS)
+
+
+def format_flags(flags: dict[str, str]) -> str:
+    """Render a flag dict in ``XLA_FLAGS`` syntax (``--k=v`` joined by
+    spaces)."""
+    return " ".join(f"--{k}={v}" for k, v in flags.items())
+
+
+def apply_serve_flags(*, force: bool = False) -> str | None:
+    """Append the serving preset to ``XLA_FLAGS`` in ``os.environ``.
+
+    Reads ``REPRO_SERVE_FLAGS`` unless ``force=True``; flags the user
+    already set in ``XLA_FLAGS`` are left alone.  Returns the new
+    ``XLA_FLAGS`` value, or ``None`` when the preset is off or no TPU
+    runtime is present (non-TPU XLA aborts on unknown flags).  Must run
+    before the first JAX computation — XLA reads the variable once at
+    backend initialization."""
+    if not force and os.environ.get(_ENV, "").lower() not in _ON_VALUES:
+        return None
+    if not tpu_present():
+        return None
+    existing = os.environ.get("XLA_FLAGS", "")
+    fresh = {k: v for k, v in SERVE_XLA_TPU_FLAGS.items() if f"--{k}=" not in existing}
+    merged = (existing + " " + format_flags(fresh)).strip()
+    os.environ["XLA_FLAGS"] = merged
+    return merged

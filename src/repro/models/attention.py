@@ -40,6 +40,23 @@ def _use_flash_kernel() -> bool:
     return jax.default_backend() == "tpu"
 
 
+def _use_decode_kernel() -> bool:
+    """Split-KV decode dispatch: ``REPRO_DECODE_KERNEL`` (1/0) overrides;
+    default follows the library's Pallas contract (TPU, or any platform
+    under ``REPRO_PALLAS_INTERPRET=1``) so CPU tests keep the jnp oracle
+    unless they opt in."""
+    import os
+
+    v = os.environ.get("REPRO_DECODE_KERNEL", "")
+    if v == "1":
+        return True
+    if v == "0":
+        return False
+    from repro.kernels import ops
+
+    return ops.use_pallas()
+
+
 def _group_q(q: Array, n_kv: int) -> Array:
     b, hq, s, d = q.shape
     return q.reshape(b, n_kv, hq // n_kv, s, d)
@@ -162,22 +179,149 @@ def local_attention(
     return out.reshape(q.shape)[:, :, :s_orig].astype(q.dtype)
 
 
-def decode_attention(q1: Array, k: Array, v: Array, *, length: Array | None = None) -> Array:
+def decode_attention(
+    q1: Array, k: Array, v: Array, *,
+    length: Array | None = None, engine: str | None = None,
+) -> Array:
     """One-token decode: q1 (B, Hq, 1, D) vs cache (B, Hkv, S, D).
 
-    Written as plain reductions over S so GSPMD turns a sequence-sharded
-    cache (SP over 'model') into partial-softmax + all-reduce automatically.
-    ``length``: number of valid cache entries (mask the tail).
+    ``length`` masks the cache tail — a scalar, or a (B,) per-slot vector
+    so every slot of a continuous-batching engine attends over exactly its
+    own valid rows (DESIGN.md §12).  ``engine`` picks the implementation:
+    ``"splitkv"`` is the two-stage split-KV Pallas kernel
+    (`kernels.flash.flash_decode`), ``"oneshot"`` the plain-reduction jnp
+    path (GSPMD turns a sequence-sharded cache into partial-softmax +
+    all-reduce automatically); ``None`` resolves from the dispatch contract
+    (`_use_decode_kernel`).
     """
     b, hkv, s, d = k.shape
+    if engine is None:
+        engine = "splitkv" if _use_decode_kernel() else "oneshot"
+    if engine == "splitkv":
+        from repro.kernels import flash as flash_k
+
+        lens = s if length is None else length
+        lens = jnp.broadcast_to(jnp.asarray(lens, jnp.int32).reshape(-1), (b,))
+        return flash_k.flash_decode(
+            q1, k, v, lengths=lens,
+            interpret=jax.default_backend() != "tpu",
+        )
     qg = _group_q(q1, hkv)  # (B, Hkv, G, 1, D)
     logits = common.feinsum("bhgqd,bhkd->bhgqk", qg, k) * (d ** -0.5)
     if length is not None:
         pos = jnp.arange(s)
-        logits = jnp.where(pos[None, None, None, None, :] < length, logits, NEG_INF)
+        lb = jnp.asarray(length)
+        if lb.ndim == 0:
+            mask = pos[None, None, None, None, :] < lb
+        else:  # per-slot (B,) lengths
+            mask = pos[None, None, None, None, :] < lb[:, None, None, None, None]
+        logits = jnp.where(mask, logits, NEG_INF)
     p = jax.nn.softmax(logits, axis=-1)
     out = common.feinsum("bhgqk,bhkd->bhgqd", p.astype(v.dtype), v)
     return out.reshape(q1.shape).astype(q1.dtype)
+
+
+def segment_attention(
+    q: Array, k: Array, v: Array, *,
+    seg_ids: Array, positions: Array, chunk: int = 512,
+) -> Array:
+    """Block-diagonal causal attention over a ``qo_indptr``-packed ragged
+    batch (DESIGN.md §12): token i attends to token j iff they belong to
+    the same segment and ``positions[i] >= positions[j]``.  ``seg_ids``
+    (T,) carries the per-token sequence id with ``-1`` for padding rows
+    (masked as keys everywhere); ``positions`` (T,) the within-sequence
+    position.  Chunked online softmax like :func:`flash_attention` — the
+    (T, T) mask is never materialized."""
+    b, hkv, t, d = k.shape
+    qg = _group_q(q, hkv)  # (B, Hkv, G, T, D)
+    chunk = min(chunk, t)
+    n_chunks = -(-t // chunk)
+    if n_chunks * chunk != t:
+        pad = n_chunks * chunk - t
+        k = jnp.pad(k, ((0, 0), (0, 0), (0, pad), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, 0), (0, pad), (0, 0)))
+        seg_k = jnp.pad(seg_ids, (0, pad), constant_values=-1)
+        pos_k = jnp.pad(positions, (0, pad))
+    else:
+        seg_k, pos_k = seg_ids, positions
+    scale = d ** -0.5
+
+    def body(carry, i):
+        m, l, acc = carry
+        kc = jax.lax.dynamic_slice_in_dim(k, i * chunk, chunk, axis=2)
+        vc = jax.lax.dynamic_slice_in_dim(v, i * chunk, chunk, axis=2)
+        sc = jax.lax.dynamic_slice_in_dim(seg_k, i * chunk, chunk, axis=0)
+        pc = jax.lax.dynamic_slice_in_dim(pos_k, i * chunk, chunk, axis=0)
+        s_log = common.feinsum("bhgqd,bhkd->bhgqk", qg, kc) * scale
+        valid = (
+            (seg_ids[:, None] == sc[None, :])
+            & (sc[None, :] >= 0)
+            & (positions[:, None] >= pc[None, :])
+        )  # (T, chunk)
+        s_log = jnp.where(valid, s_log, NEG_INF)
+        m_new = jnp.maximum(m, s_log.max(axis=-1))
+        p = jnp.exp(s_log - m_new[..., None])
+        alpha = jnp.exp(m - m_new)
+        l_new = l * alpha + p.sum(axis=-1)
+        acc_new = acc * alpha[..., None] + common.feinsum(
+            "bhgqk,bhkd->bhgqd", p.astype(v.dtype), vc
+        )
+        return (m_new, l_new, acc_new), None
+
+    m0 = jnp.full(qg.shape[:-1], NEG_INF, jnp.float32)
+    l0 = jnp.zeros(qg.shape[:-1], jnp.float32)
+    acc0 = jnp.zeros(qg.shape, jnp.float32)
+    (m, l, acc), _ = maybe_scan(body, (m0, l0, acc0), jnp.arange(n_chunks))
+    out = acc / jnp.maximum(l[..., None], 1e-30)
+    return out.reshape(q.shape).astype(q.dtype)
+
+
+def prefix_attention(
+    q: Array, k: Array, v: Array, *, lengths: Array, chunk: int = 512,
+) -> Array:
+    """Chunked-prefill continuation attention (DESIGN.md §12): q (B, Hq, C,
+    D) is a chunk of C new tokens per slot whose KV rows were just written
+    into the ring at ``[lengths[b], lengths[b]+C)``; query row i of slot b
+    attends to ring rows ``[0, lengths[b] + i + 1)`` — the already-valid
+    prefix plus its own causal triangle.  Chunked online softmax over the
+    ring axis."""
+    b, hkv, s, d = k.shape
+    qg = _group_q(q, hkv)  # (B, Hkv, G, C, D)
+    c = qg.shape[3]
+    chunk = min(chunk, s)
+    n_chunks = -(-s // chunk)
+    if n_chunks * chunk != s:
+        pad = n_chunks * chunk - s
+        k = jnp.pad(k, ((0, 0), (0, 0), (0, pad), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, 0), (0, pad), (0, 0)))
+    scale = d ** -0.5
+    limit = lengths[:, None] + jnp.arange(c)[None, :] + 1  # (B, C)
+
+    def body(carry, i):
+        m, l, acc = carry
+        kc = jax.lax.dynamic_slice_in_dim(k, i * chunk, chunk, axis=2)
+        vc = jax.lax.dynamic_slice_in_dim(v, i * chunk, chunk, axis=2)
+        s_log = common.feinsum("bhgqd,bhkd->bhgqk", qg, kc) * scale
+        k_pos = i * chunk + jnp.arange(chunk)
+        valid = (k_pos[None, None, :] < limit[:, :, None]) & (
+            k_pos[None, None, :] < s
+        )  # (B, C, chunk)
+        s_log = jnp.where(valid[:, None, None], s_log, NEG_INF)
+        m_new = jnp.maximum(m, s_log.max(axis=-1))
+        p = jnp.exp(s_log - m_new[..., None])
+        alpha = jnp.exp(m - m_new)
+        l_new = l * alpha + p.sum(axis=-1)
+        acc_new = acc * alpha[..., None] + common.feinsum(
+            "bhgqk,bhkd->bhgqd", p.astype(v.dtype), vc
+        )
+        return (m_new, l_new, acc_new), None
+
+    m0 = jnp.full(qg.shape[:-1], NEG_INF, jnp.float32)
+    l0 = jnp.zeros(qg.shape[:-1], jnp.float32)
+    acc0 = jnp.zeros(qg.shape, jnp.float32)
+    (m, l, acc), _ = maybe_scan(body, (m0, l0, acc0), jnp.arange(n_chunks))
+    out = acc / jnp.maximum(l[..., None], 1e-30)
+    return out.reshape(q.shape).astype(q.dtype)
 
 
 def cross_attention(q: Array, k: Array, v: Array) -> Array:
@@ -289,9 +433,14 @@ def attn_apply(
 
 
 def attn_prefill(
-    p: dict, cfg, x: Array, *, kind: str = "full"
+    p: dict, cfg, x: Array, *, kind: str = "full",
+    positions: Array | None = None, seg_ids: Array | None = None,
 ) -> tuple[Array, dict]:
-    """Like apply, but also returns the decode-layout KV cache."""
+    """Like apply, but also returns the decode-layout KV cache.
+
+    ``positions``/``seg_ids`` (both (T,)) switch the batch to the packed
+    ragged layout: RoPE uses the within-sequence positions and attention is
+    the block-diagonal :func:`segment_attention` (DESIGN.md §12)."""
     from repro.sharding.partition import constrain, replicated_spec, residual_spec
 
     h = common.apply_norm(cfg.norm, p["norm"], x)
@@ -299,11 +448,15 @@ def attn_prefill(
         h = constrain(h, replicated_spec(3))
     q, k, v = _project_qkv(p, cfg, x=h)
     s = x.shape[1]
-    pos = jnp.arange(s)
+    pos = jnp.arange(s) if positions is None else positions
     if cfg.use_rope:
         q = common.apply_rope(q, pos, cfg.rope_theta)
         k = common.apply_rope(k, pos, cfg.rope_theta)
-    if kind in ("swa", "local") and s > cfg.window:
+    if seg_ids is not None:
+        o = segment_attention(
+            q, k, v, seg_ids=seg_ids, positions=pos, chunk=cfg.attn_chunk
+        )
+    elif kind in ("swa", "local") and s > cfg.window:
         o = local_attention(q, k, v, window=cfg.window)
     else:
         o = flash_attention(q, k, v, causal=True, chunk=cfg.attn_chunk)
@@ -319,21 +472,68 @@ def attn_decode(
     p: dict, cfg, x1: Array, cache: dict, pos: Array, *, kind: str = "full"
 ) -> tuple[Array, dict]:
     """One-token decode. cache: k/v (B, Hkv, S_max, D) ring buffer; ``pos``
-    is the absolute position (int32 scalar).  For swa/local kinds S_max is
-    the window and the slot is pos % window."""
+    is the absolute position — an int32 scalar (every slot at the same
+    position, the seed path) or a (B,) per-slot vector (continuous
+    batching, DESIGN.md §12): each slot writes its KV row at its OWN ring
+    position and attends over exactly its own valid length.  For swa/local
+    kinds S_max is the window and the slot is pos % window."""
     h = common.apply_norm(cfg.norm, p["norm"], x1)
     q, k, v = _project_qkv(p, cfg, x=h)
+    pos = jnp.asarray(pos)
     if cfg.use_rope:
-        posv = pos[None] if pos.ndim == 0 else pos
+        # scalar -> (1,) broadcast; per-slot -> (B, 1, 1) so the rotation
+        # angles broadcast against (B, H, 1, D/2)
+        posv = pos[None] if pos.ndim == 0 else pos[:, None, None]
         q = common.apply_rope(q, posv, cfg.rope_theta)
         k = common.apply_rope(k, posv, cfg.rope_theta)
     s_max = cache["k"].shape[2]
-    slot = (pos % s_max) if kind in ("swa", "local") else pos
-    kc = jax.lax.dynamic_update_slice_in_dim(cache["k"], k, slot, axis=2)
-    vc = jax.lax.dynamic_update_slice_in_dim(cache["v"], v, slot, axis=2)
-    length = jnp.minimum(pos + 1, s_max)
+    if pos.ndim == 0:
+        slot = (pos % s_max) if kind in ("swa", "local") else pos
+        kc = jax.lax.dynamic_update_slice_in_dim(cache["k"], k, slot, axis=2)
+        vc = jax.lax.dynamic_update_slice_in_dim(cache["v"], v, slot, axis=2)
+    else:
+        slotv = (
+            (pos % s_max) if kind in ("swa", "local")
+            else jnp.minimum(pos, s_max - 1)
+        )
+        bi = jnp.arange(x1.shape[0])
+        kc = cache["k"].at[bi, :, slotv].set(k[:, :, 0])
+        vc = cache["v"].at[bi, :, slotv].set(v[:, :, 0])
+    length = jnp.minimum(pos + 1, s_max)  # scalar or (B,)
     o = decode_attention(q, kc, vc, length=length)
     out = x1 + rr.merge_heads(o) @ p["w_o"]
+    return out, {"k": kc, "v": vc}
+
+
+def attn_prefill_chunk(
+    p: dict, cfg, x: Array, cache: dict, pos: Array, active: Array,
+) -> tuple[Array, dict]:
+    """Prefill one chunk of C prompt tokens per slot directly into the
+    engine's ring caches (chunked prefill, DESIGN.md §12).
+
+    ``x`` (B, C, D) hidden chunk; ``cache`` k/v (B, Hkv, S_max, D) rings;
+    ``pos`` (B,) valid rows already in each slot's ring (the chunk's rows
+    land at ``[pos, pos+C)``); ``active`` (B,) bool — inactive slots leave
+    their cache untouched and their outputs are ignored.  Full-attention
+    kinds only (the engine's scheduler gates this path)."""
+    b, c, _ = x.shape
+    h = common.apply_norm(cfg.norm, p["norm"], x)
+    q, k, v = _project_qkv(p, cfg, x=h)  # (B, H, C, D)
+    positions = pos[:, None] + jnp.arange(c)[None, :]  # (B, C)
+    if cfg.use_rope:
+        q = common.apply_rope(q, positions[:, None, :], cfg.rope_theta)
+        k = common.apply_rope(k, positions[:, None, :], cfg.rope_theta)
+    s_max = cache["k"].shape[2]
+    rows = jnp.minimum(positions, s_max - 1)  # (B, C)
+    bi = jnp.arange(b)[:, None]
+    # scatter the chunk rows; advanced indexing puts (B, C) in front
+    kc = cache["k"].at[bi, :, rows].set(jnp.swapaxes(k, 1, 2))
+    vc = cache["v"].at[bi, :, rows].set(jnp.swapaxes(v, 1, 2))
+    sel = active[:, None, None, None]
+    kc = jnp.where(sel, kc, cache["k"])
+    vc = jnp.where(sel, vc, cache["v"])
+    o = prefix_attention(q, kc, vc, lengths=pos, chunk=cfg.attn_chunk)
+    out = x + rr.merge_heads(o) @ p["w_o"]
     return out, {"k": kc, "v": vc}
 
 

@@ -334,15 +334,22 @@ def decode_step(
     cfg,
     token: Array,  # (B,) int32
     cache: list,
-    pos: Array,  # scalar int32 absolute position
+    pos: Array,  # int32 absolute position: scalar, or (B,) per slot
     *,
     frontend_src: Array | None = None,
     batch_spec: P | None = None,
 ) -> tuple[Array, list]:
-    """One serving step: next-token logits + updated cache."""
+    """One serving step: next-token logits + updated cache.
+
+    ``pos`` may be a scalar (all slots at the same position, the seed
+    path) or a (B,) per-slot vector — the continuous-batching engine's
+    layout, threaded through to the attention ring writes and per-slot
+    length masks (DESIGN.md §12)."""
+    pos = jnp.asarray(pos)
     x = common.embed(params["embed"], token[:, None]).astype(cfg.np_dtype)
     if cfg.pos_embed == "sinusoidal":
-        x = x + common.sinusoidal_pos(pos[None], cfg.d_model).astype(cfg.np_dtype)
+        pv = pos[None] if pos.ndim == 0 else pos[:, None]
+        x = x + common.sinusoidal_pos(pv, cfg.d_model).astype(cfg.np_dtype)
     src = frontend_src
     new_caches = []
     for stage_params, stage_cache, (unit, count) in zip(
@@ -451,3 +458,144 @@ def _block_prefill(kind: str, p: dict, cfg, x: Array, src) -> tuple[Array, dict]
         y, state = rglru.rglru_apply(p["cell"], cfg, x, return_state=True)
         return mlp.mlp_apply(p["mlp"], cfg, y), state
     raise ValueError(kind)
+
+
+# ---------------------------------------------------------------------------
+# serving: ragged packed prefill + chunked prefill (DESIGN.md §12)
+# ---------------------------------------------------------------------------
+
+#: block kinds the packed/chunked serving prefills support: plain causal
+#: attention blocks only — recurrent state and window rings carry context
+#: across the packed axis and cannot be segment-masked.
+ATTN_ONLY_KINDS = ("attn", "attn_dense", "attn_moe")
+
+
+def supports_ragged(cfg) -> bool:
+    """True when ``cfg`` can take the packed ragged / chunked prefill
+    routes: every decoder block is a full-attention kind and there is no
+    encoder/frontend stream (segment masks don't reach those paths)."""
+    kinds = {k for unit, _ in cfg.decoder_plan() for k in unit}
+    return (
+        kinds <= set(ATTN_ONLY_KINDS)
+        and cfg.attn_kind != "swa"
+        and not cfg.encoder_layers
+        and not cfg.n_frontend_tokens
+    )
+
+
+def _block_prefill_ragged(
+    kind: str, p: dict, cfg, x: Array, positions: Array, seg_ids: Array
+) -> tuple[Array, dict]:
+    if kind not in ATTN_ONLY_KINDS:
+        raise ValueError(f"ragged prefill supports attention blocks only, got {kind!r}")
+    x, kv = attn.attn_prefill(
+        p["attn"], cfg, x, kind="full", positions=positions, seg_ids=seg_ids
+    )
+    if kind == "attn_moe":
+        x, _ = moe.moe_apply(p["moe"], cfg, x)
+    else:
+        x = mlp.mlp_apply(p["mlp"], cfg, x)
+    return x, kv
+
+
+def prefill_ragged(
+    params: dict,
+    cfg,
+    tokens: Array,  # (1, T) packed prompts
+    seg_ids: Array,  # (T,) int32 sequence id per token, -1 for padding
+    positions: Array,  # (T,) int32 within-sequence positions
+    last_ix: Array,  # (n_seq,) packed index of each sequence's last token
+    *,
+    batch_spec: P | None = None,
+) -> tuple[Array, list]:
+    """Packed ragged prefill: several prompts share ONE prefill batch in a
+    ``qo_indptr``-style layout (`core.index_plan.ragged_layout`); attention
+    is segment-masked block-diagonal causal.  Returns (per-sequence
+    last-token logits (n_seq, V), packed caches whose KV rows sit in packed
+    order — the engine's ragged_rows IndexPlan gather unpacks them into the
+    decode slots)."""
+    x = common.embed(params["embed"], tokens).astype(cfg.np_dtype)
+    if cfg.pos_embed == "sinusoidal":
+        x = x + common.sinusoidal_pos(positions, cfg.d_model).astype(cfg.np_dtype)
+    caches = []
+    for stage_params, (unit, count) in zip(params["stages"], cfg.decoder_plan()):
+
+        def body(h, unit_params):
+            if batch_spec is not None:
+                h = partition.constrain(h, batch_spec)
+            unit_cache = {}
+            for i, kind in enumerate(unit):
+                h, unit_cache[f"b{i}"] = _block_prefill_ragged(
+                    kind, unit_params[f"b{i}"], cfg, h, positions, seg_ids
+                )
+            return h, unit_cache
+
+        body = jax.checkpoint(body) if cfg.remat else body
+        x, stage_cache = maybe_scan(body, x, stage_params)
+        caches.append(stage_cache)
+    x = common.apply_norm(cfg.norm, params["final_norm"], x)
+    h_last = x[0, last_ix]  # (n_seq, D)
+    logits = _logits_chunk(params, cfg, h_last[:, None])[:, 0]
+    return logits, caches
+
+
+def _block_prefill_chunk(
+    kind: str, p: dict, cfg, x: Array, cache: dict, pos: Array, active: Array
+) -> tuple[Array, dict]:
+    if kind not in ATTN_ONLY_KINDS:
+        raise ValueError(f"chunked prefill supports attention blocks only, got {kind!r}")
+    sub = {k: cache[k] for k in ("k", "v")}
+    x, sub = attn.attn_prefill_chunk(p["attn"], cfg, x, sub, pos, active)
+    new = dict(cache)
+    new.update(sub)
+    if kind == "attn_moe":
+        x, _ = moe.moe_apply(p["moe"], cfg, x)
+    else:
+        x = mlp.mlp_apply(p["mlp"], cfg, x)
+    return x, new
+
+
+def prefill_chunk(
+    params: dict,
+    cfg,
+    tokens: Array,  # (B, C) chunk of prompt tokens per slot
+    cache: list,
+    pos: Array,  # (B,) valid ring rows per slot before this chunk
+    active: Array,  # (B,) bool: slots taking a chunk this step
+    last_ix: Array,  # (B,) index of each slot's last real token in the chunk
+    *,
+    batch_spec: P | None = None,
+) -> tuple[Array, list]:
+    """Advance chunked prefill by one C-token chunk per active slot,
+    writing KV rows at ``[pos, pos+C)`` directly into the engine cache
+    (inactive slots' caches pass through untouched).  Returns (logits at
+    each slot's ``last_ix`` chunk row, updated cache) — the logits matter
+    only for slots whose prompt ends inside this chunk."""
+    pos = jnp.asarray(pos)
+    x = common.embed(params["embed"], tokens).astype(cfg.np_dtype)
+    if cfg.pos_embed == "sinusoidal":
+        positions = pos[:, None] + jnp.arange(tokens.shape[1])[None, :]
+        x = x + common.sinusoidal_pos(positions, cfg.d_model).astype(cfg.np_dtype)
+    new_caches = []
+    for stage_params, stage_cache, (unit, count) in zip(
+        params["stages"], cache, cfg.decoder_plan()
+    ):
+
+        def body(h, xs):
+            unit_params, unit_cache = xs
+            if batch_spec is not None:
+                h = partition.constrain(h, batch_spec)
+            new_unit = {}
+            for i, kind in enumerate(unit):
+                h, new_unit[f"b{i}"] = _block_prefill_chunk(
+                    kind, unit_params[f"b{i}"], cfg, h, unit_cache[f"b{i}"],
+                    pos, active,
+                )
+            return h, new_unit
+
+        x, new_stage = maybe_scan(body, x, (stage_params, stage_cache))
+        new_caches.append(new_stage)
+    x = common.apply_norm(cfg.norm, params["final_norm"], x)
+    h_last = jnp.take_along_axis(x, last_ix[:, None, None], axis=1)  # (B,1,D)
+    logits = _logits_chunk(params, cfg, h_last)[:, 0]
+    return logits, new_caches

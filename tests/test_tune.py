@@ -491,7 +491,7 @@ class TestBenchCheckGate:
     @pytest.fixture
     def bench_dir(self, tmp_path):
         for f in ("BENCH_rearrange.json", "BENCH_stencil.json",
-                  "BENCH_moe.json", "BENCH_dist.json"):
+                  "BENCH_moe.json", "BENCH_dist.json", "BENCH_serve.json"):
             shutil.copy(REPO / f, tmp_path / f)
         return tmp_path
 

@@ -9,7 +9,8 @@ Three checks, in order:
 2. **Measured-path ratios** — the plan-engine comparisons the committed
    files exist to track (fused vs per-sweep stencil, IndexPlan vs seed
    rowwise MoE dispatch, engine vs seed head permutes, halo-blocked vs
-   per-sweep distributed stencil) must stay above a tolerance-banded
+   per-sweep distributed stencil, split-KV vs one-shot decode
+   attention) must stay above a tolerance-banded
    floor.  The floors sit well below the currently-measured ratios, so
    noise passes but a silent engine regression (or a hand-edited JSON)
    exits nonzero.
@@ -47,6 +48,7 @@ BENCH_FILES = (
     "BENCH_stencil.json",
     "BENCH_moe.json",
     "BENCH_dist.json",
+    "BENCH_serve.json",
 )
 
 # (file, numerator op regex, denominator op regex, floor): the measured
@@ -68,6 +70,11 @@ RATIO_POLICIES = (
     # halo-blocked distributed stencil vs per-sweep exchanges (~3x committed)
     ("BENCH_dist.json",
      r"stencil_halo_blocked_k\d+", r"stencil_per_sweep_k\d+", 1.0),
+    # split-KV two-stage decode vs the one-shot kernel at sq=1 (both
+    # interpret-measured with identical byte accounting, so this is a
+    # pure time ratio; ISSUE 6 floor: >= 1.0 even in smoke)
+    ("BENCH_serve.json",
+     r"decode_splitkv_interp", r"decode_oneshot_interp", 1.0),
 )
 
 
@@ -143,6 +150,7 @@ def run_smoke(root: pathlib.Path, tmp: pathlib.Path) -> tuple[dict[str, dict], l
         "--json-stencil", str(paths["BENCH_stencil.json"]),
         "--json-moe", str(paths["BENCH_moe.json"]),
         "--json-dist", str(paths["BENCH_dist.json"]),
+        "--json-serve", str(paths["BENCH_serve.json"]),
     ]
     r = subprocess.run(
         cmd, cwd=root, capture_output=True, text=True, timeout=3600

@@ -26,6 +26,8 @@ DEFAULT_ROOTS = [
     "src/repro/kernels",
     "src/repro/sharding",
     "src/repro/launch",
+    "src/repro/serve",
+    "src/repro/data",
 ]
 
 FuncDef = (ast.FunctionDef, ast.AsyncFunctionDef)
