@@ -18,6 +18,9 @@
 #   make test-dist       distributed plan-engine suite directly on 8 forced
 #                        host devices (the tier-1 run covers the same thing
 #                        through a subprocess launcher test)
+#   make test-train      gradient-correctness tier (flash backward vs the
+#                        naive oracle, grad accumulation, blockwise-parallel
+#                        blocks vs monolithic)
 #   make lint            byte-compile + import sanity (no external linters
 #                        are installed in the container) + fails if any
 #                        __pycache__/.pyc path is git-tracked
@@ -30,8 +33,9 @@
 
 PYTHONPATH := src
 
-.PHONY: test test-interpret test-dist test-serve bench bench-smoke bench-check \
-	bench-moe bench-dist bench-serve lint check docs-check
+.PHONY: test test-interpret test-dist test-serve test-train bench bench-smoke \
+	bench-check bench-moe bench-dist bench-serve bench-train lint check \
+	docs-check
 
 docs-check:
 	python tools/check_docstrings.py
@@ -68,6 +72,12 @@ test-dist:
 
 test-serve:
 	PYTHONPATH=$(PYTHONPATH) python -m pytest -x -q tests/test_serve_engine.py
+
+test-train:
+	PYTHONPATH=$(PYTHONPATH) python -m pytest -x -q tests/test_train_engine.py
+
+bench-train:
+	PYTHONPATH=$(PYTHONPATH) python -m benchmarks.run --only train --json ''
 
 lint:
 	python -m compileall -q src tests benchmarks examples

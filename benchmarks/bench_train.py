@@ -1,0 +1,177 @@
+"""Beyond-paper: the blockwise-parallel training hot path (DESIGN §13).
+
+Two row families at equal semantics:
+
+* **kernel-phase roofline** — the flash forward and the recompute-based
+  flash backward (dq + dk/dv pallas_calls) timed separately at the same
+  attention shape, each against its own exact DMA byte count
+  (``kernels.flash.dma_bytes`` / ``bwd_dma_bytes``), plus the chunked
+  FFN's forward and backward — so ``BENCH_train.json`` carries the
+  roofline utilization per training phase (fwd / bwd-attn / bwd-ffn), the
+  same accounting the §11 autotuner's cost model uses for the bwd tile.
+* **the train step** — ``make_train_step`` end to end (value_and_grad +
+  AdamW) for the monolithic vs the blockwise-parallel model at a
+  train_4k-proportioned (seq-dominant, memory-limited) shape, reporting
+  tokens/s/device.  Both rows use the same algorithmic byte count, so the
+  GB/s ratio in ``tools/check_bench.py`` is a pure time ratio (floor:
+  blockwise >= 0.7x monolithic — the blockwise path exists to cut peak
+  activation memory, and the gate asserts it does not *cost* throughput
+  beyond a tolerance band).
+
+Rows land in ``BENCH_train.json`` (see benchmarks/run.py).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from benchmarks.common import row, smoke, time_fn
+from repro import configs
+from repro.kernels import flash
+from repro.models import mlp
+from repro.models import transformer as tf
+from repro.optim import adamw
+from repro.train import trainer
+
+
+def _attn_phase_rows(out: list[str]) -> None:
+    """Flash forward vs flash backward at one attention shape, each against
+    its exact DMA byte count (phase-level roofline utilization)."""
+    b, hq, hkv, s, d = (1, 4, 2, 128, 32) if smoke() else (2, 8, 2, 1024, 64)
+    key = jax.random.PRNGKey(0)
+    kq, kk, kv_, ko = jax.random.split(key, 4)
+    q = jax.random.normal(kq, (b, hq, s, d), jnp.float32)
+    k = jax.random.normal(kk, (b, hkv, s, d), jnp.float32)
+    v = jax.random.normal(kv_, (b, hkv, s, d), jnp.float32)
+    do = jax.random.normal(ko, (b, hq, s, d), jnp.float32)
+    interp = jax.default_backend() != "tpu"
+    plan = flash.plan_flash_bwd(b, hq, hkv, s, s, d, jnp.float32)
+    bq, bk = plan.block_q, plan.block_k
+    out.append(f"# attn shapes b={b} hq={hq} hkv={hkv} s={s} d={d}")
+    out.append(f"# flash bwd plan: {plan.describe()}")
+
+    fwd = jax.jit(
+        lambda a, c, w: flash.flash_attention(
+            a, c, w, causal=True, block_q=bq, block_k=bk, interpret=interp
+        )
+    )
+    t_fwd = time_fn(fwd, q, k, v)
+    fwd_bytes = flash.dma_bytes(b, hq, hkv, s, s, d, 4, block_q=bq, block_k=bk)
+    out.append(
+        row("train_fwd_attn", t_fwd, fwd_bytes, "[flash fwd kernel]",
+            phase="fwd", plan_mode="flash", measured="pallas",
+            block_q=bq, block_k=bk)
+    )
+
+    # time the backward sweep alone: the fwd recompute is part of the bwd
+    # kernels already; the (o, lse) residuals are produced once here
+    o, lse = flash._flash_call(q, k, v, True, 0, bq, bk, interp)
+    bwd = jax.jit(
+        lambda a, c, w, g, oo, ll: flash.flash_attention_bwd(
+            a, c, w, oo, ll, g, causal=True, block_q=bq, block_k=bk,
+            interpret=interp,
+        )
+    )
+    t_bwd = time_fn(bwd, q, k, v, do, o, lse)
+    bwd_bytes = flash.bwd_dma_bytes(b, hq, hkv, s, s, d, 4, block_q=bq, block_k=bk)
+    out.append(
+        row("train_bwd_attn", t_bwd, bwd_bytes,
+            f"[dq + dkv pallas sweeps, {t_bwd/t_fwd:.2f}x fwd time]",
+            phase="bwd_attn", plan_mode="flash_bwd", measured="pallas",
+            block_q=bq, block_k=bk, plan_bytes=plan.bytes_moved)
+    )
+
+
+def _ffn_phase_rows(out: list[str]) -> None:
+    """Chunked-FFN forward and backward, algorithmic byte accounting:
+    weights streamed once per chunk pass + activations read/written."""
+    cfg = configs.get_config("qwen2-7b-smoke").with_(dtype="float32")
+    b, s = (2, 128) if smoke() else (4, 1024)
+    d, f = cfg.d_model, cfg.d_ff
+    key = jax.random.PRNGKey(1)
+    p = mlp.mlp_init(jax.random.PRNGKey(2), cfg)
+    x = jax.random.normal(key, (b, s, d), jnp.float32)
+    n_w = 3 if cfg.act in ("swiglu", "geglu") else 2
+    # fwd: x in, weights once, hidden (B,S,F) written+read, out written
+    fwd_bytes = 4 * (n_w * d * f + 2 * b * s * d + 2 * b * s * f)
+    # bwd: the same streams again for dx plus a second pass for dw
+    bwd_bytes = 2 * fwd_bytes
+
+    fwd = jax.jit(lambda xx: mlp.mlp_apply(p, cfg, xx))
+    t_fwd = time_fn(fwd, x)
+    out.append(
+        row("train_fwd_ffn", t_fwd, fwd_bytes, "[dense FFN fwd]",
+            phase="fwd", plan_mode="ffn", measured="xla")
+    )
+    bwd = jax.jit(jax.grad(lambda xx: mlp.mlp_apply(p, cfg, xx).sum()))
+    t_bwd = time_fn(bwd, x)
+    out.append(
+        row("train_bwd_ffn", t_bwd, bwd_bytes,
+            f"[FFN grad, {t_bwd/t_fwd:.2f}x fwd time]",
+            phase="bwd_ffn", plan_mode="ffn", measured="xla")
+    )
+
+
+def _train_step_bytes(cfg, b: int, s: int) -> int:
+    """Algorithmic per-step traffic shared by both train-step rows: every
+    parameter read for fwd, read for bwd, and grad+moments written/read by
+    AdamW (3 param-sized streams), plus the residual stream activations
+    once per layer per direction."""
+    n_params = sum(
+        int(jnp.prod(jnp.array(l.shape)))
+        for l in jax.tree.leaves(tf.abstract_params(cfg))
+    )
+    item = 4  # fp32 benchmark dtype
+    act = 2 * cfg.n_layers * 2 * b * s * cfg.d_model * item
+    return 5 * n_params * item + act
+
+
+def _train_rows(out: list[str]) -> None:
+    """Monolithic vs blockwise-parallel train step (tokens/s/device)."""
+    base = configs.get_config("qwen2-7b-smoke").with_(dtype="float32")
+    # train_4k-proportioned: sequence-dominant batch (memory-limited regime)
+    b, s, chunk = (2, 128, 32) if smoke() else (4, 1024, 256)
+    oc = adamw.OptConfig(lr=1e-3)
+    tok = jax.random.randint(jax.random.PRNGKey(3), (b, s), 0, base.vocab)
+    lab = jax.random.randint(jax.random.PRNGKey(4), (b, s), 0, base.vocab)
+    batch = {"tokens": tok, "labels": lab}
+    n_dev = jax.device_count()
+    nbytes = _train_step_bytes(base, b, s)
+    out.append(f"# train shapes b={b} s={s} chunk={chunk} devices={n_dev}")
+
+    times = {}
+    for name, cfg in (
+        ("train_step_monolithic", base),
+        ("train_step_blockwise",
+         base.with_(blockwise=True, blockwise_chunk=chunk,
+                    remat_policy="nothing_saveable")),
+    ):
+        params = tf.init_params(jax.random.PRNGKey(0), cfg)
+        opt = adamw.init(params)
+        step = jax.jit(trainer.make_train_step(cfg, oc, None))
+        t = time_fn(step, params, opt, batch)
+        times[name] = t
+        tps = b * s / t / n_dev
+        note = f"[{tps:.0f} tok/s/dev]"
+        extra = {}
+        if name == "train_step_blockwise":
+            ratio = times["train_step_monolithic"] / t
+            note = f"[{tps:.0f} tok/s/dev, {ratio:.2f}x vs monolithic]"
+            extra = {"improvement_vs_monolithic": round(ratio, 3),
+                     "q_chunk": chunk}
+        out.append(
+            row(name, t, nbytes, note,
+                phase="step", plan_mode=name.split("_")[-1], measured="xla",
+                cell="train_4k", tokens=b * s,
+                tokens_per_s_device=round(tps, 2), **extra)
+        )
+
+
+def run():
+    """Suite entry point (benchmarks.run)."""
+    out: list[str] = []
+    _attn_phase_rows(out)
+    _ffn_phase_rows(out)
+    _train_rows(out)
+    return out

@@ -14,7 +14,9 @@ rows (DistPlan strategies with bytes-on-wire accounting, run on 8 forced
 host devices in a subprocess) to ``BENCH_dist.json``, and the serving
 suite's rows (split-KV vs one-shot decode, ragged vs bucket prefill, the
 multi-tenant trace with tokens/s and p50/p99 per-token latency) to
-``BENCH_serve.json``.
+``BENCH_serve.json``, and the training suite's rows (flash fwd/bwd and
+FFN phase rooflines, monolithic vs blockwise-parallel train step with
+tokens/s/device) to ``BENCH_train.json``.
 
 The head-permute and stencil suites also report the autotuned plan next
 to the heuristic one (``plan_source`` field, DESIGN.md §11) so tuned and
@@ -46,6 +48,7 @@ SUITES = [
     ("moe_dispatch", "benchmarks.bench_moe_dispatch", "beyond-paper MoE dispatch"),
     ("dist", "benchmarks.bench_dist", "beyond-paper mesh-aware engines (8 fake devices)"),
     ("serve", "benchmarks.bench_serve", "beyond-paper serving engine (split-KV decode, ragged prefill)"),
+    ("train", "benchmarks.bench_train", "beyond-paper training path (flash bwd, blockwise blocks)"),
     ("roofline", "benchmarks.bench_roofline", "dry-run roofline table"),
 ]
 
@@ -82,6 +85,12 @@ def main() -> None:
         default=None,
         help="output path for the serving suite's decode/prefill/trace rows",
     )
+    ap.add_argument(
+        "--json-train",
+        default=None,
+        help="output path for the training suite's phase-roofline and "
+        "train-step rows",
+    )
     args = ap.parse_args()
     only = set(args.only.split(",")) if args.only else None
     if args.smoke:
@@ -93,6 +102,7 @@ def main() -> None:
         "json_moe": "BENCH_moe.json",
         "json_dist": "BENCH_dist.json",
         "json_serve": "BENCH_serve.json",
+        "json_train": "BENCH_train.json",
     }
     for attr, path in defaults.items():
         if getattr(args, attr) is None:
@@ -134,6 +144,7 @@ def main() -> None:
         ("moe_dispatch", args.json_moe),
         ("dist", args.json_dist),
         ("serve", args.json_serve),
+        ("train", args.json_train),
     ):
         suite_rows = [r for r in common.RECORDS if r.get("suite") == suite]
         if suite_rows and path:

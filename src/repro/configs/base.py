@@ -65,6 +65,9 @@ class ModelConfig:
     dtype: str = "bfloat16"
     fsdp: bool = False
     remat: bool = True
+    remat_policy: str = "nothing_saveable"  # see models.common.REMAT_POLICIES
+    blockwise: bool = False  # blockwise-parallel training blocks (DESIGN §13)
+    blockwise_chunk: int = 1024  # query/sequence chunk for blockwise attn+FFN
     loss_chunk: int = 2048
     attn_chunk: int = 512
     d_ff_dense: int | None = None

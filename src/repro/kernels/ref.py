@@ -322,3 +322,42 @@ def fd_stencil_offsets(order: int) -> tuple[list[tuple[int, int]], list[float]]:
             offsets.append(off)
             weights.append(coeffs[k])
     return offsets, weights
+
+
+# ---------------------------------------------------------------------------
+# attention oracle (flash forward/backward ground truth, DESIGN.md §13)
+# ---------------------------------------------------------------------------
+
+
+def attention(
+    q: Array,  # (B, Hq, Sq, D)
+    k: Array,  # (B, Hkv, Skv, D)
+    v: Array,
+    *,
+    causal: bool = True,
+    q_offset: int = 0,
+) -> Array:
+    """Naive GQA attention: materializes the full (Sq, Skv) matrix in fp32.
+
+    Exact semantics of ``kernels.flash.flash_attention`` — unscaled
+    ``softmax(q k^T) v`` (callers pre-scale q by 1/sqrt(d)), causal mask
+    at absolute query position ``q_offset + i``, kv head ``h // g`` serving
+    query head ``h``.  Ground truth for the gradient-correctness tier
+    (tests/test_train_engine.py) and the second-order fallback of the flash
+    backward custom VJP; it is fully differentiable to any order.
+    """
+    b, hq, sq, d = q.shape
+    _, hkv, skv, _ = k.shape
+    g = hq // hkv
+    kk = jnp.repeat(k, g, axis=1) if g > 1 else k
+    vv = jnp.repeat(v, g, axis=1) if g > 1 else v
+    s = jnp.einsum(
+        "bhqd,bhkd->bhqk", q.astype(jnp.float32), kk.astype(jnp.float32)
+    )
+    if causal:
+        q_pos = q_offset + jnp.arange(sq)[:, None]
+        k_pos = jnp.arange(skv)[None, :]
+        s = jnp.where(q_pos >= k_pos, s, -1e30)
+    p = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bhqk,bhkd->bhqd", p, vv.astype(jnp.float32))
+    return o.astype(q.dtype)

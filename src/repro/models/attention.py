@@ -18,6 +18,8 @@ Softmax statistics are fp32 regardless of io dtype.
 
 from __future__ import annotations
 
+import functools
+
 import jax
 import jax.numpy as jnp
 
@@ -90,7 +92,7 @@ def flash_attention(
         from repro.kernels import flash as flash_k
 
         return flash_k.flash_attention(
-            q * (d ** -0.5), k, v, causal=causal,
+            q * (d ** -0.5), k, v, causal=causal, q_offset=q_offset,
             block_q=min(512, q.shape[2]), block_k=min(512, skv),
             interpret=jax.default_backend() != "tpu",
         )
@@ -135,6 +137,59 @@ def flash_attention(
     (m, l, acc), _ = maybe_scan(body, (m0, l0, acc0), jnp.arange(n_chunks))
     out = acc / jnp.maximum(l[..., None], 1e-30)
     return out.reshape(q.shape).astype(q.dtype)
+
+
+def flash_attention_blockwise(
+    q: Array,
+    k: Array,
+    v: Array,
+    *,
+    causal: bool = True,
+    chunk: int = 512,
+    q_chunk: int = 1024,
+    q_offset: int = 0,
+    policy=None,
+) -> Array:
+    """Blockwise-parallel attention (DESIGN.md §13): the query axis is cut
+    into ``q_chunk`` blocks, each computed under its own ``jax.checkpoint``
+    so peak activation memory is one block, not the full sequence.
+
+    Bit-identical to :func:`flash_attention` on the same inputs: every
+    block calls the same chunked online-softmax (or Pallas kernel) with a
+    static per-block ``q_offset``, and — when causal — the KV stream is
+    truncated to the block's last needed ``chunk`` boundary.  Truncation is
+    exact, not approximate: a fully-masked KV chunk contributes
+    ``p = exp(NEG_INF - m) == 0.0`` (f32 underflow) and ``alpha == 1``, so
+    the online-softmax state (m, l, acc) passes through such chunks
+    unchanged.  ``policy`` is a resolved ``jax.checkpoint`` policy
+    (``models.common.remat_policy``); ``None`` saves nothing (full
+    recompute per block).
+    """
+    b, hq, sq, d = q.shape
+    skv = k.shape[2]
+    cq = min(q_chunk, sq)
+    ck = min(chunk, skv)
+
+    def block(qc, kc, vc, off):
+        return flash_attention(
+            qc, kc, vc, causal=causal, chunk=chunk, q_offset=off
+        )
+
+    outs = []
+    for lo in range(0, sq, cq):
+        hi = min(sq, lo + cq)
+        if causal:
+            # KV rows past the block's last query are fully masked; keep
+            # chunk boundaries aligned with the monolithic path so the
+            # accumulation order is identical.
+            kv_hi = min(skv, -(-(q_offset + hi) // ck) * ck)
+        else:
+            kv_hi = skv
+        fn = jax.checkpoint(
+            functools.partial(block, off=q_offset + lo), policy=policy
+        )
+        outs.append(fn(q[:, :, lo:hi], k[:, :, :kv_hi], v[:, :, :kv_hi]))
+    return outs[0] if len(outs) == 1 else jnp.concatenate(outs, axis=2)
 
 
 def local_attention(
@@ -424,6 +479,12 @@ def attn_apply(
         o = local_attention(q, k, v, window=cfg.window)
     elif kind == "bidir":
         o = cross_attention(q, k, v)  # full bidirectional self-attn
+    elif getattr(cfg, "blockwise", False):
+        o = flash_attention_blockwise(
+            q, k, v, causal=True, chunk=cfg.attn_chunk,
+            q_chunk=cfg.blockwise_chunk,
+            policy=common.remat_policy(cfg.remat_policy),
+        )
     else:
         o = flash_attention(q, k, v, causal=True, chunk=cfg.attn_chunk)
     out = rr.merge_heads(o) @ p["w_o"]

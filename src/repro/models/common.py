@@ -53,6 +53,41 @@ def _bf16_grads_bwd(_, g):
 bf16_grads.defvjp(_bf16_grads_fwd, _bf16_grads_bwd)
 
 
+#: names accepted by :func:`remat_policy` (SNIPPETS Snippet 2 convention).
+REMAT_POLICIES = (
+    "nothing_saveable",
+    "dots_saveable",
+    "dots_with_no_batch_dims_saveable",
+    "everything_saveable",
+)
+
+
+def remat_policy(name: str | None):
+    """Resolve a remat-policy name to a ``jax.checkpoint`` policy callable.
+
+    ``None`` / ``"none"`` / ``"nothing_saveable"`` map to ``None`` — the
+    ``jax.checkpoint`` default, which saves nothing and recomputes the whole
+    block on the backward pass (the blockwise-parallel training default:
+    peak activation memory is one chunk).  The ``dots*`` policies save
+    matmul outputs (recompute only the cheap elementwise tail), and
+    ``everything_saveable`` disables rematerialization while keeping the
+    chunked structure.  Unknown names raise ``ValueError``.
+    """
+    if name in (None, "none", "nothing_saveable"):
+        return None
+    pols = jax.checkpoint_policies
+    table = {
+        "dots_saveable": pols.dots_saveable,
+        "dots_with_no_batch_dims_saveable": pols.dots_with_no_batch_dims_saveable,
+        "everything_saveable": pols.everything_saveable,
+    }
+    if name not in table:
+        raise ValueError(
+            f"unknown remat policy {name!r}; expected one of {REMAT_POLICIES}"
+        )
+    return table[name]
+
+
 def truncated_normal_init(key, shape, scale: float, dtype) -> Array:
     stddev = scale / max(1.0, (shape[-2] if len(shape) > 1 else shape[-1])) ** 0.5
     return (jax.random.truncated_normal(key, -2.0, 2.0, shape, jnp.float32) * stddev).astype(dtype)

@@ -60,6 +60,27 @@ def mlp_apply(p: dict, cfg, x: Array) -> Array:
     return x + out
 
 
+def mlp_apply_blockwise(
+    p: dict, cfg, x: Array, *, chunk: int = 1024, policy=None
+) -> Array:
+    """Blockwise-parallel FFN (DESIGN.md §13): the sequence axis is cut
+    into ``chunk`` blocks, each full norm->FFN->residual run under its own
+    ``jax.checkpoint`` so the (B, chunk, d_ff) hidden tensor — the largest
+    activation in the block — never exists for more than one chunk at a
+    time on the backward pass.
+
+    Bit-identical to :func:`mlp_apply`: every op is pointwise over the
+    sequence axis (per-token norm, row-wise matmuls), so slicing the
+    sequence does not change any row's reduction order.  ``policy`` is a
+    resolved ``jax.checkpoint`` policy (``models.common.remat_policy``).
+    """
+    s = x.shape[1]
+    c = min(chunk, s)
+    fn = jax.checkpoint(lambda xc: mlp_apply(p, cfg, xc), policy=policy)
+    outs = [fn(x[:, lo:lo + c]) for lo in range(0, s, c)]
+    return outs[0] if len(outs) == 1 else jnp.concatenate(outs, axis=1)
+
+
 def ffn_only(p: dict, cfg, h: Array) -> Array:
     """The FFN body without norm/residual (used by MoE shared experts)."""
     return _hidden(p, cfg.act, h) @ p["w_down"]

@@ -53,36 +53,48 @@ def block_init(key, cfg, kind: str) -> dict:
     raise ValueError(f"unknown block kind {kind!r}")
 
 
+def _mlp(p: dict, cfg, x: Array) -> Array:
+    """Dense-FFN dispatch for the training forward: the blockwise-parallel
+    seq-chunked FFN (DESIGN.md §13) when ``cfg.blockwise``, else the
+    monolithic :func:`repro.models.mlp.mlp_apply` (bit-identical)."""
+    if getattr(cfg, "blockwise", False):
+        return mlp.mlp_apply_blockwise(
+            p, cfg, x, chunk=cfg.blockwise_chunk,
+            policy=common.remat_policy(cfg.remat_policy),
+        )
+    return mlp.mlp_apply(p, cfg, x)
+
+
 def block_apply(kind: str, p: dict, cfg, x: Array, src: Array | None) -> tuple[Array, Array]:
     """Training/eval forward for one block. Returns (x, aux_loss)."""
     zero = jnp.zeros((), jnp.float32)
     if kind in ("attn", "attn_dense"):
         x = attn.attn_apply(p["attn"], cfg, x, kind=cfg.attn_kind)
-        return mlp.mlp_apply(p["mlp"], cfg, x), zero
+        return _mlp(p["mlp"], cfg, x), zero
     if kind == "local":
         x = attn.attn_apply(p["attn"], cfg, x, kind="local")
-        return mlp.mlp_apply(p["mlp"], cfg, x), zero
+        return _mlp(p["mlp"], cfg, x), zero
     if kind == "enc":
         x = attn.attn_apply(p["attn"], cfg, x, kind="bidir")
-        return mlp.mlp_apply(p["mlp"], cfg, x), zero
+        return _mlp(p["mlp"], cfg, x), zero
     if kind == "attn_moe":
         x = attn.attn_apply(p["attn"], cfg, x, kind=cfg.attn_kind)
         x, aux = moe.moe_apply(p["moe"], cfg, x)
         return x, aux
     if kind == "xattn":
         x = attn.xattn_apply(p["xattn"], cfg, x, src)
-        return mlp.mlp_apply(p["mlp"], cfg, x), zero
+        return _mlp(p["mlp"], cfg, x), zero
     if kind == "dec":
         x = attn.attn_apply(p["attn"], cfg, x, kind="full")
         x = attn.xattn_apply(p["xattn"], cfg, x, src)
-        return mlp.mlp_apply(p["mlp"], cfg, x), zero
+        return _mlp(p["mlp"], cfg, x), zero
     if kind == "mlstm":
         return xlstm.mlstm_apply(p["cell"], cfg, x), zero
     if kind == "slstm":
         return xlstm.slstm_apply(p["cell"], cfg, x), zero
     if kind == "rglru":
         x = rglru.rglru_apply(p["cell"], cfg, x)
-        return mlp.mlp_apply(p["mlp"], cfg, x), zero
+        return _mlp(p["mlp"], cfg, x), zero
     raise ValueError(f"unknown block kind {kind!r}")
 
 
@@ -140,6 +152,17 @@ def abstract_params(cfg) -> Any:
 # ---------------------------------------------------------------------------
 
 
+def _maybe_remat(body, cfg):
+    """Wrap a scan body in ``jax.checkpoint`` under ``cfg.remat``, resolving
+    the named ``cfg.remat_policy`` (``nothing_saveable`` — the default,
+    matching plain ``jax.checkpoint`` — ``dots_saveable``, ...) through
+    :func:`repro.models.common.remat_policy`."""
+    if not cfg.remat:
+        return body
+    policy = common.remat_policy(getattr(cfg, "remat_policy", None))
+    return jax.checkpoint(body, policy=policy)
+
+
 def _run_stages(
     stages: list, plans, cfg, x: Array, src: Array | None, batch_spec: P | None
 ) -> tuple[Array, Array]:
@@ -155,7 +178,7 @@ def _run_stages(
                 aux = aux + a
             return (h, aux), None
 
-        body = jax.checkpoint(body) if cfg.remat else body
+        body = _maybe_remat(body, cfg)
         (x, aux_total), _ = maybe_scan(body, (x, aux_total), stage_params)
     return x, aux_total
 
@@ -228,7 +251,7 @@ def loss_fn(
         gold = jnp.take_along_axis(logits, lj[..., None], axis=-1)[..., 0]
         return tot + jnp.sum(lse - gold), None
 
-    body = jax.checkpoint(body) if cfg.remat else body
+    body = _maybe_remat(body, cfg)
     total, _ = maybe_scan(body, jnp.zeros((), jnp.float32), (hc, lc))
     loss = total / (b * n_chunks * chunk)
     if cfg.moe is not None:
@@ -410,7 +433,7 @@ def prefill(
                 )
             return h, unit_cache
 
-        body = jax.checkpoint(body) if cfg.remat else body
+        body = _maybe_remat(body, cfg)
         x, stage_cache = maybe_scan(body, x, stage_params)
         caches.append(stage_cache)
     x = common.apply_norm(cfg.norm, params["final_norm"], x)
@@ -530,7 +553,7 @@ def prefill_ragged(
                 )
             return h, unit_cache
 
-        body = jax.checkpoint(body) if cfg.remat else body
+        body = _maybe_remat(body, cfg)
         x, stage_cache = maybe_scan(body, x, stage_params)
         caches.append(stage_cache)
     x = common.apply_norm(cfg.norm, params["final_norm"], x)

@@ -15,6 +15,8 @@ import jax.numpy as jnp
 
 @dataclass(frozen=True)
 class OptConfig:
+    """AdamW hyperparameters + the cosine LR schedule knobs."""
+
     lr: float = 3e-4
     b1: float = 0.9
     b2: float = 0.95
@@ -39,6 +41,7 @@ def lr_at(oc: OptConfig, step: jax.Array) -> jax.Array:
 
 
 def init(params) -> dict:
+    """Zero fp32 moment tensors (+ step counter) matching ``params``."""
     zeros = lambda p: jnp.zeros(p.shape, jnp.float32)
     return {
         "m": jax.tree.map(zeros, params),
@@ -48,6 +51,7 @@ def init(params) -> dict:
 
 
 def global_norm(tree) -> jax.Array:
+    """fp32 L2 norm over every leaf of ``tree`` (the clipping statistic)."""
     sq = jax.tree.map(lambda g: jnp.sum(g.astype(jnp.float32) ** 2), tree)
     return jnp.sqrt(jax.tree.reduce(jnp.add, sq, jnp.zeros((), jnp.float32)))
 

@@ -58,6 +58,11 @@ def _unflatten_into(skeleton, flat: dict, prefix=""):
 
 
 class Checkpointer:
+    """Filesystem checkpointer: atomic per-step directories of .npy leaves
+    with a JSON manifest, optional async host-side writes, and pruning to
+    the last ``keep_last`` steps.  ``restore`` can device_put into new
+    shardings (the elastic-resharding path)."""
+
     def __init__(self, directory: str, *, keep_last: int = 3, async_save: bool = True):
         self.dir = Path(directory)
         self.dir.mkdir(parents=True, exist_ok=True)
@@ -68,6 +73,8 @@ class Checkpointer:
     # -- save ---------------------------------------------------------------
 
     def save(self, step: int, tree) -> None:
+        """Snapshot ``tree`` at ``step`` (async when configured; the host
+        copy is taken synchronously so callers may mutate after return)."""
         # host-gather while the caller still owns the buffers
         host = {p: np.asarray(jax.device_get(l)) for p, l in _flatten(tree)}
         if self.async_save:
@@ -80,6 +87,7 @@ class Checkpointer:
             self._write(step, host)
 
     def wait(self) -> None:
+        """Block until any in-flight async save has landed."""
         if self._thread is not None:
             self._thread.join()
             self._thread = None
@@ -120,6 +128,7 @@ class Checkpointer:
     # -- restore ------------------------------------------------------------
 
     def all_steps(self) -> list[int]:
+        """Sorted list of complete (manifest-bearing) checkpoint steps."""
         out = []
         for p in self.dir.glob("step_*"):
             if p.suffix == ".tmp" or not (p / "manifest.json").exists():
@@ -128,6 +137,7 @@ class Checkpointer:
         return sorted(out)
 
     def latest_step(self) -> int | None:
+        """Most recent complete step, or ``None`` if no checkpoint exists."""
         steps = self.all_steps()
         return steps[-1] if steps else None
 

@@ -47,6 +47,7 @@ def plan_mesh_shape(n_devices: int, model_width: int, *, pods: int = 1):
 
 
 def plan_mesh(n_devices: int, model_width: int, *, pods: int = 1):
+    """Build the mesh for :func:`plan_mesh_shape`'s chosen layout."""
     from repro.launch.mesh import make_mesh_compat
 
     shape, axes = plan_mesh_shape(n_devices, model_width, pods=pods)
@@ -72,6 +73,7 @@ class StepTimer:
         self._t0: float | None = None
 
     def start(self):
+        """Mark the beginning of a step."""
         self._t0 = time.monotonic()
 
     def stop(self) -> bool:

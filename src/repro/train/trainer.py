@@ -19,6 +19,15 @@ from repro.utils.scanutil import maybe_scan
 
 
 def make_train_step(cfg, oc: adamw.OptConfig, mesh, *, accum_steps: int = 1):
+    """Build the jittable train step: value_and_grad over the (blockwise
+    when ``cfg.blockwise``) chunked loss, ``accum_steps`` microbatches
+    summed into fp32 accumulators, then one AdamW update.
+
+    The returned ``train_step(params, opt_state, batch) -> (params,
+    opt_state, metrics)`` raises ``ValueError`` if the global batch is not
+    divisible by ``accum_steps``; with a ``mesh`` the loss runs under the
+    sharded ``residual_spec`` constraint path.
+    """
     bspec = partition.residual_spec(cfg) if mesh is not None else None
 
     def lossf(p, batch):
@@ -35,6 +44,13 @@ def make_train_step(cfg, oc: adamw.OptConfig, mesh, *, accum_steps: int = 1):
         if accum_steps == 1:
             loss, grads = jax.value_and_grad(lossf)(params, batch)
         else:
+            bsz = batch["tokens"].shape[0]
+            if bsz % accum_steps:
+                raise ValueError(
+                    f"global batch {bsz} is not divisible by "
+                    f"accum_steps={accum_steps}; pick accum_steps that "
+                    f"divides the batch (microbatch = batch / accum_steps)"
+                )
             micro = jax.tree.map(
                 lambda x: x.reshape(accum_steps, x.shape[0] // accum_steps, *x.shape[1:]),
                 batch,
@@ -62,6 +78,8 @@ def make_train_step(cfg, oc: adamw.OptConfig, mesh, *, accum_steps: int = 1):
 
 
 def make_eval_step(cfg, mesh):
+    """Build the jittable eval step: ``eval_step(params, batch) -> loss``
+    over the same chunked loss the train step differentiates."""
     bspec = partition.residual_spec(cfg) if mesh is not None else None
 
     def eval_step(params, batch):

@@ -491,7 +491,8 @@ class TestBenchCheckGate:
     @pytest.fixture
     def bench_dir(self, tmp_path):
         for f in ("BENCH_rearrange.json", "BENCH_stencil.json",
-                  "BENCH_moe.json", "BENCH_dist.json", "BENCH_serve.json"):
+                  "BENCH_moe.json", "BENCH_dist.json", "BENCH_serve.json",
+                  "BENCH_train.json"):
             shutil.copy(REPO / f, tmp_path / f)
         return tmp_path
 

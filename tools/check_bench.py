@@ -10,7 +10,8 @@ Three checks, in order:
    files exist to track (fused vs per-sweep stencil, IndexPlan vs seed
    rowwise MoE dispatch, engine vs seed head permutes, halo-blocked vs
    per-sweep distributed stencil, split-KV vs one-shot decode
-   attention) must stay above a tolerance-banded
+   attention, blockwise-parallel vs monolithic train step) must stay
+   above a tolerance-banded
    floor.  The floors sit well below the currently-measured ratios, so
    noise passes but a silent engine regression (or a hand-edited JSON)
    exits nonzero.
@@ -49,6 +50,7 @@ BENCH_FILES = (
     "BENCH_moe.json",
     "BENCH_dist.json",
     "BENCH_serve.json",
+    "BENCH_train.json",
 )
 
 # (file, numerator op regex, denominator op regex, floor): the measured
@@ -75,6 +77,12 @@ RATIO_POLICIES = (
     # pure time ratio; ISSUE 6 floor: >= 1.0 even in smoke)
     ("BENCH_serve.json",
      r"decode_splitkv_interp", r"decode_oneshot_interp", 1.0),
+    # blockwise-parallel vs monolithic train step at the train_4k-
+    # proportioned shape (same byte accounting => pure time ratio).  The
+    # blockwise path buys peak-activation memory; the gate asserts the
+    # throughput cost stays inside the tolerance band (ISSUE 7 floor).
+    ("BENCH_train.json",
+     r"train_step_blockwise", r"train_step_monolithic", 0.7),
 )
 
 
@@ -151,6 +159,7 @@ def run_smoke(root: pathlib.Path, tmp: pathlib.Path) -> tuple[dict[str, dict], l
         "--json-moe", str(paths["BENCH_moe.json"]),
         "--json-dist", str(paths["BENCH_dist.json"]),
         "--json-serve", str(paths["BENCH_serve.json"]),
+        "--json-train", str(paths["BENCH_train.json"]),
     ]
     r = subprocess.run(
         cmd, cwd=root, capture_output=True, text=True, timeout=3600

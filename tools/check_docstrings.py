@@ -28,6 +28,8 @@ DEFAULT_ROOTS = [
     "src/repro/launch",
     "src/repro/serve",
     "src/repro/data",
+    "src/repro/train",
+    "src/repro/optim",
 ]
 
 FuncDef = (ast.FunctionDef, ast.AsyncFunctionDef)
