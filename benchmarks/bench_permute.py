@@ -91,9 +91,31 @@ def _head_family() -> list[str]:
                     plan_mode=plan.mode,
                     kernel=plan.kernel,
                     measured="pallas",
-                    plan_source="heuristic",
+                    plan_source=plan.plan_source,
                     tiles=f"{plan.block_r}x{plan.block_c}",
                     improvement_vs_seed=round(t_seed / t_engine, 3),
+                )
+            )
+            # the closed-form plan timed on its own row (DESIGN.md §14):
+            # by the bit-identity contract this is the SAME plan object as
+            # the engine row when the derivation matched, so the pair
+            # tracks analytic-vs-heuristic as a pure noise measurement —
+            # tools/check_bench.py holds it to a tolerance-banded 1.0
+            t_analytic = time_fn(
+                jax.jit(lambda a, p=plan: ops.apply_plan(a, p)), x
+            )
+            out.append(
+                row(
+                    f"{name}_analytic",
+                    t_analytic,
+                    nbytes,
+                    f"[source={plan.plan_source}, "
+                    f"{t_engine/t_analytic:.2f}x vs engine]",
+                    plan_mode=plan.mode,
+                    kernel=plan.kernel,
+                    measured="pallas",
+                    plan_source=plan.plan_source,
+                    tiles=f"{plan.block_r}x{plan.block_c}",
                 )
             )
             out.append(
@@ -137,5 +159,82 @@ def _head_family() -> list[str]:
     return out
 
 
+def _affine_ops() -> list[str]:
+    """The ops the analytic planner unlocks (DESIGN.md §14): bit-reversal,
+    diagonal reorder, and the table-free seeded shuffle, each ONE
+    pallas_call planned by `plan_affine` (plan_source=analytic).  The
+    shuffle's gather-table oracle rides along as the baseline the affine
+    route makes redundant."""
+    from repro.core import affine
+    from repro.core.plan import plan_affine
+    from repro.kernels import ref
+
+    out = []
+    rng = np.random.default_rng(2)
+    if smoke():
+        n_rows, payload, plane = 256, 64, (64, 128)
+    else:
+        # moderate sizes: the rotated-digit routes grid one step per batch
+        # digit combination, and off-TPU they time under the interpreter
+        n_rows, payload, plane = 4096, 256, (1024, 1024)
+    force_interp = jax.default_backend() != "tpu"
+    prev = os.environ.get("REPRO_PALLAS_INTERPRET")
+    if force_interp:
+        os.environ["REPRO_PALLAS_INTERPRET"] = "1"
+    try:
+        cases = (
+            ("bit_reversal", affine.bit_reversal_map((n_rows, payload)),
+             lambda a: ops.bit_reversal(a, axis=0)),
+            ("diagonal_reorder", affine.diagonal_map(plane),
+             lambda a: ops.diagonal_reorder(a)),
+            ("shuffle", affine.shuffle_map(n_rows, payload=(payload,), seed=0),
+             lambda a: ops.shuffle(a, seed=0)),
+        )
+        for name, amap, fn in cases:
+            plan = plan_affine(amap, jnp.float32)
+            x = jnp.asarray(
+                rng.standard_normal(amap.in_digits), jnp.float32
+            ).reshape(
+                plane if name == "diagonal_reorder" else (n_rows, payload)
+            )
+            nbytes = 2 * x.nbytes
+            t = time_fn(jax.jit(fn), x)
+            out.append(
+                row(
+                    f"{name}_affine",
+                    t,
+                    nbytes,
+                    f"[{plan.mode}, tiles {plan.block_r}x{plan.block_c}]",
+                    plan_mode=plan.mode,
+                    kernel=plan.kernel,
+                    measured="pallas",
+                    plan_source=plan.plan_source,
+                    tiles=f"{plan.block_r}x{plan.block_c}",
+                )
+            )
+        xs = jnp.asarray(
+            rng.standard_normal((n_rows, payload)), jnp.float32
+        )
+        t_table = time_fn(jax.jit(lambda a: ref.shuffle(a, seed=0)), xs)
+        out.append(
+            row(
+                "shuffle_table_oracle",
+                t_table,
+                2 * xs.nbytes,
+                "[materialized gather table]",
+                plan_mode="oracle",
+                kernel="jnp_take",
+                measured="xla_oracle",
+            )
+        )
+    finally:
+        if force_interp:
+            if prev is None:
+                os.environ.pop("REPRO_PALLAS_INTERPRET", None)
+            else:
+                os.environ["REPRO_PALLAS_INTERPRET"] = prev
+    return out
+
+
 def run() -> list[str]:
-    return _table1() + _head_family()
+    return _table1() + _head_family() + _affine_ops()

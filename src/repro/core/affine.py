@@ -1,0 +1,791 @@
+"""Affine index-map IR: closed-form tiling for the whole rearrangement class.
+
+The paper (and PR 5's autotuner) pick tiles by heuristic formula and then
+*measure* a neighborhood.  Bouverot-Dupuis & Sheeran (arXiv:2306.07795)
+observe that every request this library lowers — reshape, permute, window,
+stride, bit-reversal — is an **affine index map over mixed-radix digit
+spaces**: ``in-index = A·out-index + b`` where the index vectors are digit
+decompositions and A routes digits.  For that class the bandwidth-optimal
+tile is derivable in closed form from the contiguity run-lengths on both
+sides (the load block covers the input-fastest run, the store block the
+output-fastest run), so the tuner's job collapses to *verifying* the
+analytic seed's ±1 neighborhood instead of searching (DESIGN.md §14).
+
+The IR
+------
+:class:`AffineMap` is the gather form: for output digit coordinates
+``o[0..m-1]`` the input digit coordinates are
+
+    c[src[j]] = base[src[j]] + ((o[j] + rot[j] + skew_sign[j] * o[skew[j]])
+                                 mod out_digits[j])
+    c[i]      = base[i]                    for input digits no output reads
+
+* ``src``   — the 0/1 routing matrix A (one input digit per output digit);
+* ``base``  — the offset vector b (window bases, stride phases);
+* ``rot``   — per-digit modular rotation (seeded bijective shuffles,
+  Mitchell et al., arXiv:2106.06161 — table-free index functions);
+* ``skew``/``skew_sign`` — one cross-digit term (the paper's diagonal
+  reorder: ``in_col = (i + j) mod C`` is affine over Z_C).
+
+``compose`` / ``invert`` / ``digit_split`` close the algebra;
+``merge_runs`` is the coalescing projection (the affine form of
+``layout.coalesce``, asserted equivalent in tests);  :func:`derive` maps a
+recognized request to its execution plane and closed-form tiles.
+
+Everything here is static planning metadata (pure python / numpy): the
+kernels receive the map as a hashable compile-time constant and turn it
+into BlockSpec ``index_map`` arithmetic — zero gather tables in HBM.
+"""
+
+from __future__ import annotations
+
+import math
+from dataclasses import dataclass, replace
+
+import numpy as np
+
+from repro.kernels.tiling import (
+    align_block,
+    cdiv,
+    plan_copy_tiles,
+    plan_transpose_tiles,
+    plan_transpose_vec_tiles,
+)
+
+
+def _prod(xs) -> int:
+    return int(math.prod(xs)) if xs else 1
+
+
+@dataclass(frozen=True)
+class AffineMap:
+    """Affine index map over mixed-radix digit spaces (gather form).
+
+    ``out[o] = in[f(o)]`` with ``f`` as in the module docstring.  The map is
+    immutable and hashable — plans cache on it and the kernels take it as a
+    static (compile-time) argument.
+    """
+
+    in_digits: tuple[int, ...]
+    out_digits: tuple[int, ...]
+    src: tuple[int, ...]  # src[j]: input digit read by output digit j
+    base: tuple[int, ...]  # per-input-digit additive offset
+    rot: tuple[int, ...]  # per-output-digit modular rotation
+    skew: tuple[int, ...]  # per-output-digit cross term source (-1: none)
+    skew_sign: tuple[int, ...]  # +1 / -1 sign of the cross term
+
+    def __post_init__(self):
+        ni, mo = len(self.in_digits), len(self.out_digits)
+        if not (len(self.src) == len(self.rot) == len(self.skew)
+                == len(self.skew_sign) == mo):
+            raise ValueError("out-digit field lengths disagree")
+        if len(self.base) != ni:
+            raise ValueError("base must have one entry per input digit")
+        if any(r < 1 for r in self.in_digits + self.out_digits):
+            raise ValueError("digit radices must be >= 1 (zero-size arrays "
+                             "are handled by the planner, not the IR)")
+        if len(set(self.src)) != mo:
+            raise ValueError(f"src {self.src} is not injective")
+        mapped = set()
+        for j in range(mo):
+            d, r = self.src[j], self.out_digits[j]
+            if not 0 <= d < ni:
+                raise ValueError(f"src[{j}]={d} out of range")
+            mapped.add(d)
+            if not (0 <= self.base[d] and self.base[d] + r <= self.in_digits[d]):
+                raise ValueError(
+                    f"digit {j}: window [{self.base[d]}, {self.base[d]}+{r}) "
+                    f"exceeds input radix {self.in_digits[d]}"
+                )
+            if not 0 <= self.rot[j] < r:
+                raise ValueError(f"rot[{j}]={self.rot[j]} outside [0, {r})")
+            k = self.skew[j]
+            if k == -1:
+                if self.skew_sign[j] != 1:
+                    raise ValueError("skew_sign must be +1 when skew is -1")
+            else:
+                if not (0 <= k < mo and k != j):
+                    raise ValueError(f"skew[{j}]={k} invalid")
+                if self.skew_sign[j] not in (1, -1):
+                    raise ValueError("skew_sign must be +1 or -1")
+                if self.rot[k] != 0 or self.skew[k] != -1:
+                    raise ValueError(
+                        f"skew source digit {k} must be plain (rot=0, no "
+                        f"skew) so the map stays invertible"
+                    )
+        for i in range(ni):
+            if i not in mapped and not 0 <= self.base[i] < self.in_digits[i]:
+                raise ValueError(f"unmapped digit {i}: base {self.base[i]} "
+                                 f"outside [0, {self.in_digits[i]})")
+
+    # -- inspection ---------------------------------------------------------
+
+    @property
+    def n_in(self) -> int:
+        """Total input index-space size."""
+        return _prod(self.in_digits)
+
+    @property
+    def n_out(self) -> int:
+        """Total output index-space size."""
+        return _prod(self.out_digits)
+
+    def is_bijection(self) -> bool:
+        """True when the map permutes the full index space (every input
+        digit mapped at full radix — ``invert`` requires this)."""
+        return (
+            len(self.out_digits) == len(self.in_digits)
+            and set(self.src) == set(range(len(self.in_digits)))
+            and all(
+                self.out_digits[j] == self.in_digits[self.src[j]]
+                for j in range(len(self.out_digits))
+            )
+        )
+
+    def is_permutation(self) -> bool:
+        """True for pure digit routing (a (shape, perm) transpose in digit
+        space): bijective with no rotations and no cross terms."""
+        return (
+            self.is_bijection()
+            and all(r == 0 for r in self.rot)
+            and all(k == -1 for k in self.skew)
+        )
+
+    # -- constructors -------------------------------------------------------
+
+    @classmethod
+    def identity(cls, shape) -> "AffineMap":
+        """The identity map on ``shape`` (reshape requests: the flat index
+        is unchanged, only the digit grouping differs)."""
+        shape = tuple(int(s) for s in shape)
+        n = len(shape)
+        return cls(shape, shape, tuple(range(n)), (0,) * n, (0,) * n,
+                   (-1,) * n, (1,) * n)
+
+    @classmethod
+    def from_perm(cls, shape, perm) -> "AffineMap":
+        """The transpose ``out = transpose(x, perm)`` as a digit routing."""
+        shape = tuple(int(s) for s in shape)
+        perm = tuple(int(p) for p in perm)
+        if sorted(perm) != list(range(len(shape))):
+            raise ValueError(f"bad perm {perm} for rank {len(shape)}")
+        m = len(perm)
+        return cls(shape, tuple(shape[p] for p in perm), perm,
+                   (0,) * len(shape), (0,) * m, (-1,) * m, (1,) * m)
+
+    @classmethod
+    def from_window(cls, shape, base, sizes, perm) -> "AffineMap":
+        """The fused windowed reorder ``transpose(x[base:base+sizes], perm)``
+        (paper §III-B N->M): window bases ride in ``base``, the permute in
+        ``src``."""
+        shape = tuple(int(s) for s in shape)
+        base = tuple(int(b) for b in base)
+        sizes = tuple(int(s) for s in sizes)
+        perm = tuple(int(p) for p in perm)
+        m = len(perm)
+        return cls(shape, tuple(sizes[p] for p in perm), perm, base,
+                   (0,) * m, (-1,) * m, (1,) * m)
+
+    # -- algebra ------------------------------------------------------------
+
+    def digit_split(self, j: int, factors) -> "AffineMap":
+        """Split output digit ``j`` (and the input digit it reads) into the
+        mixed-radix ``factors`` (product must equal the radix).  Only plain
+        full-radix digits split — a rotation or cross term has no digit-wise
+        decomposition."""
+        factors = tuple(int(f) for f in factors)
+        r = self.out_digits[j]
+        if _prod(factors) != r:
+            raise ValueError(f"factors {factors} do not multiply to {r}")
+        if self.rot[j] != 0 or self.skew[j] != -1 or j in set(self.skew):
+            raise ValueError("only plain digits (no rot/skew) can split")
+        d = self.src[j]
+        if self.in_digits[d] != r or self.base[d] != 0:
+            raise ValueError("only full-radix zero-base digits can split")
+        k = len(factors)
+
+        def shift_in(i):
+            return i if i < d else i + k - 1
+
+        in_digits = (self.in_digits[:d] + factors + self.in_digits[d + 1:])
+        base = (self.base[:d] + (0,) * k + self.base[d + 1:])
+        out_digits = (self.out_digits[:j] + factors + self.out_digits[j + 1:])
+        src, rot, skew, sign = [], [], [], []
+        for t in range(len(self.out_digits)):
+            if t == j:
+                src.extend(d + q for q in range(k))
+                rot.extend([0] * k)
+                skew.extend([-1] * k)
+                sign.extend([1] * k)
+            else:
+                src.append(shift_in(self.src[t]))
+                rot.append(self.rot[t])
+                s = self.skew[t]
+                skew.append(s if s < j else (s + k - 1) if s > j else s)
+                sign.append(self.skew_sign[t])
+        return AffineMap(in_digits, out_digits, tuple(src), base,
+                         tuple(rot), tuple(skew), tuple(sign))
+
+    def invert(self) -> "AffineMap":
+        """The inverse gather map (bijections only): rotations negate, the
+        cross term flips sign, ``src`` inverts."""
+        if not self.is_bijection():
+            raise ValueError("only full-radix bijections invert")
+        n = len(self.src)
+        inv_of = {self.src[j]: j for j in range(n)}  # in digit -> out digit
+        src, rot, skew, sign = [], [], [], []
+        for i in range(n):  # inverse out digit i == original in digit i
+            j = inv_of[i]
+            r = self.out_digits[j]
+            src.append(j)
+            rot.append((-self.rot[j]) % r)
+            k = self.skew[j]
+            if k == -1:
+                skew.append(-1)
+                sign.append(1)
+            else:
+                # o_j = (c_i - rot - s*o_k) mod r, and o_k = c_{src[k]}
+                skew.append(self.src[k])
+                sign.append(-self.skew_sign[j])
+        return AffineMap(self.out_digits, self.in_digits, tuple(src),
+                         (0,) * n, tuple(rot), tuple(skew), tuple(sign))
+
+    def compose(self, g: "AffineMap") -> "AffineMap":
+        """Function composition ``self ∘ g`` (apply ``g``'s gather first):
+        the fused map of op ``B(A(x))`` where ``self`` is A's map and ``g``
+        B's.  Requires ``g.in_digits == self.out_digits``; raises when the
+        per-digit mod-affine functions do not stay representable."""
+        if g.in_digits != self.out_digits:
+            raise ValueError(
+                f"digit spaces disagree: {g.in_digits} vs {self.out_digits}"
+            )
+        mo = len(g.out_digits)
+        src, rot, skew, sign = [], [], [], []
+        base = list(self.base)
+        f_inv = {self.src[j]: j for j in range(len(self.src))}
+
+        def f_plain(k):  # self's digit k is the identity function
+            return (self.rot[k] == 0 and self.skew[k] == -1
+                    and self.base[self.src[k]] == 0)
+
+        for j in range(mo):
+            k = g.src[j]  # self-out digit fed by g-out digit j
+            d = self.src[k]
+            rf, rg = self.out_digits[k], g.out_digits[j]
+            g_base = g.base[k]
+            # composed per-digit function:
+            #   c = base_f[d] + ((y + rot_f + s_f*y_sk) % rf),
+            #   y = g_base + ((o + rot_g + s_g*o_sk) % rg)
+            if self.rot[k] == 0 and self.skew[k] == -1:
+                # f translates: c = base_f[d] + g_base + ((o + ...) % rg)
+                src.append(d)
+                rot.append(g.rot[j])
+                skew.append(g.skew[j])
+                sign.append(g.skew_sign[j])
+                base[d] = self.base[d] + g_base
+            elif rg == rf and g_base == 0:
+                # full-radix chain: rotations add mod r
+                src.append(d)
+                rot.append((g.rot[j] + self.rot[k]) % rf)
+                if self.skew[k] != -1:
+                    if not f_plain(self.skew[k]):
+                        raise ValueError("cross terms do not compose here")
+                    # f's skew source digit must pass through g untouched
+                    k2 = self.skew[k]
+                    j2 = next(
+                        (t for t in range(mo) if g.src[t] == k2
+                         and g.rot[t] == 0 and g.skew[t] == -1
+                         and g.base[k2] == 0
+                         and g.out_digits[t] == self.out_digits[k2]),
+                        None,
+                    )
+                    if j2 is None:
+                        raise ValueError("skew source not identity under g")
+                    if g.skew[j] == -1:
+                        skew.append(j2)
+                        sign.append(self.skew_sign[k])
+                    elif (g.skew[j] == j2
+                          and g.skew_sign[j] + self.skew_sign[k] == 0):
+                        # opposite cross terms on the same source cancel
+                        # (the f . f^-1 case): a plain rotated digit remains
+                        skew.append(-1)
+                        sign.append(1)
+                    else:
+                        raise ValueError("cross terms do not compose here")
+                else:
+                    skew.append(g.skew[j])
+                    sign.append(g.skew_sign[j])
+            else:
+                raise ValueError("composition not digit-affine representable")
+        # self-out digits g never reads are pinned at g's base: fold the
+        # constant through self's digit function
+        read = set(g.src)
+        for k in range(len(self.out_digits)):
+            if k in read:
+                continue
+            if self.skew[k] != -1:
+                raise ValueError("cannot pin a skewed digit to a constant")
+            d = self.src[k]
+            base[d] = self.base[d] + (
+                (g.base[k] + self.rot[k]) % self.out_digits[k]
+            )
+        return AffineMap(self.in_digits, g.out_digits, tuple(src),
+                         tuple(base), tuple(rot), tuple(skew), tuple(sign))
+
+    # -- materialization ----------------------------------------------------
+
+    def index_vector(self) -> np.ndarray:
+        """Flat input index per flat output index (int64, length n_out) —
+        the materialized gather table the kernels make redundant.  Oracle /
+        test surface; vectorized numpy."""
+        mo = len(self.out_digits)
+        flat = np.arange(self.n_out, dtype=np.int64)
+        # output digit coordinates
+        o = []
+        w = self.n_out
+        for j in range(mo):
+            w //= self.out_digits[j]
+            o.append((flat // w) % self.out_digits[j])
+        in_w = {}
+        w = 1
+        for i in reversed(range(len(self.in_digits))):
+            in_w[i] = w
+            w *= self.in_digits[i]
+        out = np.zeros_like(flat)
+        mapped = set()
+        for j in range(mo):
+            d = self.src[j]
+            mapped.add(d)
+            v = o[j] + self.rot[j]
+            if self.skew[j] != -1:
+                v = v + self.skew_sign[j] * o[self.skew[j]]
+            c = self.base[d] + np.mod(v, self.out_digits[j])
+            out += c * in_w[d]
+        for i in range(len(self.in_digits)):
+            if i not in mapped:
+                out += self.base[i] * in_w[i]
+        return out
+
+
+# ---------------------------------------------------------------------------
+# recognizers: request -> AffineMap
+# ---------------------------------------------------------------------------
+
+
+def factor_digits(n: int, max_digits: int = 8) -> tuple[int, ...]:
+    """Mixed-radix factorization of ``n`` (ascending prime factors, merged
+    pairwise until at most ``max_digits`` remain).  Primes give the single
+    digit ``(n,)`` — a rotation-only shuffle space, documented weak."""
+    if n <= 1:
+        return (max(n, 1),)
+    digits, m, p = [], n, 2
+    while p * p <= m:
+        while m % p == 0:
+            digits.append(p)
+            m //= p
+        p += 1
+    if m > 1:
+        digits.append(m)
+    while len(digits) > max_digits:
+        digits = sorted(digits)
+        digits = [digits[0] * digits[1]] + digits[2:]
+    return tuple(sorted(digits, reverse=True))
+
+
+def bit_reversal_map(shape, axis: int = 0) -> AffineMap:
+    """Bit-reversal permutation of ``shape[axis]`` (must be a power of two)
+    — the FFT layout transform, as a digit-reversed routing over the axis's
+    binary digit split."""
+    shape = tuple(int(s) for s in shape)
+    n = shape[axis]
+    if n < 1 or n & (n - 1):
+        raise ValueError(f"bit_reversal axis size {n} is not a power of two")
+    amap = AffineMap.identity(shape)
+    k = n.bit_length() - 1
+    if k == 0:
+        return amap
+    amap = amap.digit_split(axis, (2,) * k)
+    # reverse the k binary digits of the axis in the output routing
+    src = list(amap.src)
+    src[axis:axis + k] = reversed(src[axis:axis + k])
+    return replace(amap, src=tuple(src))
+
+
+def strided_map(shape, axis: int, stride: int, phase: int = 0) -> AffineMap:
+    """The strided gather ``x[..., phase::stride, ...]`` on ``axis``
+    (``shape[axis]`` divisible by ``stride``): a digit split into
+    (n//stride, stride) with the stride digit pinned at ``phase`` — a
+    window in digit space."""
+    shape = tuple(int(s) for s in shape)
+    n, axis = shape[axis], int(axis)
+    if stride < 1 or n % stride:
+        raise ValueError(f"stride {stride} does not divide axis size {n}")
+    if not 0 <= phase < stride:
+        raise ValueError(f"phase {phase} outside [0, {stride})")
+    if stride == 1:
+        return AffineMap.identity(shape)
+    amap = AffineMap.identity(shape).digit_split(axis, (n // stride, stride))
+    # drop the stride digit from the outputs; pin it at phase
+    keep = [j for j in range(len(amap.out_digits)) if j != axis + 1]
+    base = list(amap.base)
+    base[amap.src[axis + 1]] = phase
+    return AffineMap(
+        amap.in_digits,
+        tuple(amap.out_digits[j] for j in keep),
+        tuple(amap.src[j] for j in keep),
+        tuple(base),
+        tuple(amap.rot[j] for j in keep),
+        (-1,) * len(keep),
+        (1,) * len(keep),
+    )
+
+
+def diagonal_map(shape) -> AffineMap:
+    """The paper's diagonal reorder on the trailing plane:
+    ``out[..., i, j] = in[..., i, (i + j) mod C]`` — one +1 cross term on
+    the lane digit (partition-camping-free diagonal walk, DESIGN.md §8)."""
+    shape = tuple(int(s) for s in shape)
+    if len(shape) < 2:
+        raise ValueError("diagonal_map needs a trailing (R, C) plane")
+    n = len(shape)
+    amap = AffineMap.identity(shape)
+    skew = list(amap.skew)
+    sign = list(amap.skew_sign)
+    skew[n - 1] = n - 2
+    sign[n - 1] = 1
+    return replace(amap, skew=tuple(skew), skew_sign=tuple(sign))
+
+
+def shuffle_map(n_rows: int, payload=(), seed: int = 0) -> AffineMap:
+    """Seeded bijective row shuffle as an affine map: the row index's
+    mixed-radix digits get a seeded permutation plus per-digit rotations
+    (Mitchell et al., arXiv:2106.06161 — a bijective index *function*, so
+    the kernel needs no gather table in HBM).  ``payload`` axes append as
+    identity digits (rows move whole).  Affine shuffles are cache-friendly
+    epoch shuffles, not cryptographic ones."""
+    payload = tuple(int(s) for s in payload)
+    digits = factor_digits(int(n_rows))
+    k = len(digits)
+    rng = np.random.default_rng(seed)
+    perm = tuple(int(p) for p in rng.permutation(k))
+    out_digits = tuple(digits[p] for p in perm)
+    rot = tuple(int(rng.integers(0, r)) for r in out_digits)
+    np_ = len(payload)
+    return AffineMap(
+        digits + payload,
+        out_digits + payload,
+        perm + tuple(range(k, k + np_)),
+        (0,) * (k + np_),
+        rot + (0,) * np_,
+        (-1,) * (k + np_),
+        (1,) * (k + np_),
+    )
+
+
+def _divisors(m: int) -> tuple[int, ...]:
+    """Divisors of ``m`` in ``[2, m]``, ascending.  The peel loop probes
+    small radixes first (finest decomposition) but needs composite ones
+    too: a rotation on a composite digit (e.g. radix 4, rot 3) carries
+    between its prime sub-digits, so only the composite probe matches."""
+    small, large = [], []
+    d = 2
+    while d * d <= m:
+        if m % d == 0:
+            small.append(d)
+            if d != m // d:
+                large.append(m // d)
+        d += 1
+    return tuple(small) + tuple(reversed(large)) + ((m,) if m > 1 else ())
+
+
+def _probe_digit(vals, r: int) -> tuple[int, int] | None:
+    """Recover (stride, rot) when ``vals`` (length r) follows
+    ``const + stride * ((o + rot) % r)``; None otherwise."""
+    d = np.diff(vals)
+    pos = sorted({int(v) for v in d.tolist() if v > 0})
+    if len(pos) == 1:
+        stride = pos[0]
+        wraps = np.flatnonzero(d != stride)
+        if len(wraps) == 0:
+            return stride, 0  # no wrap inside the probe: rotation-free
+        if len(wraps) == 1 and int(d[wraps[0]]) == -(r - 1) * stride:
+            return stride, r - 1 - int(wraps[0])  # wrap at o == r-1-rot
+        return None
+    if not pos and r == 2 and int(d[0]) < 0:
+        return -int(d[0]), 1  # radix 2, rotated: the single diff is the wrap
+    return None
+
+
+def recognize_index_vector(idx) -> AffineMap | None:
+    """Try to recognize an arbitrary flat permutation vector as a no-skew
+    affine digit map (separable per-digit mod-affine).  Returns the map, or
+    None — the caller then falls back to the generic gather route (this is
+    the 'non-affine requests refused' contract).
+
+    The out-digit structure is *discovered*, not assumed: digits are peeled
+    from the minor (fastest-varying) end — a candidate radix ``p`` (every
+    divisor of the residual length, smallest first so plain digits peel
+    finest) is accepted when every consecutive group of ``p`` entries
+    follows one shared ``stride * ((o + rot) % p)`` pattern on top of a
+    per-group base, then the per-group bases form the residual vector for
+    the next peel."""
+    idx = np.asarray(idx, dtype=np.int64)
+    n = int(idx.shape[0])
+    if n == 0 or sorted(idx.tolist()) != list(range(n)):
+        return None
+    if n == 1:
+        return AffineMap.identity((1,))
+    peeled = []  # (radix, stride, rot), minor -> major
+    cur = idx
+    m = n
+    while m > 1:
+        found = False
+        for p in _divisors(m):
+            groups = cur.reshape(m // p, p)
+            rec = _probe_digit(groups[0], p)
+            if rec is None:
+                continue
+            stride, rot = rec
+            pattern = stride * ((np.arange(p) + rot) % p)
+            bases = groups - pattern[None, :]
+            if (bases == bases[:, :1]).all():
+                peeled.append((p, stride, rot))
+                cur = bases[:, 0]
+                m //= p
+                found = True
+                break
+        if not found:
+            return None
+    out_digits = tuple(r for r, _, _ in reversed(peeled))
+    k = len(out_digits)
+    recovered = [(s, r, rot) for r, s, rot in reversed(peeled)]
+    # strides must form a mixed-radix weight set: sort descending and check
+    order = sorted(range(k), key=lambda j: -recovered[j][0])
+    in_digits = tuple(recovered[j][1] for j in order)
+    src = tuple(order.index(j) for j in range(k))
+    expect_w = 1
+    for pos in reversed(range(k)):
+        if recovered[order[pos]][0] != expect_w:
+            return None
+        expect_w *= in_digits[pos]
+    amap = AffineMap(
+        in_digits, out_digits,
+        tuple(src[j] for j in range(k)),
+        (0,) * k,
+        tuple(recovered[j][2] for j in range(k)),
+        (-1,) * k, (1,) * k,
+    )
+    if not np.array_equal(amap.index_vector(), idx):
+        return None
+    return amap
+
+
+# ---------------------------------------------------------------------------
+# coalescing projection + closed-form derivation
+# ---------------------------------------------------------------------------
+
+
+def merge_runs(amap: AffineMap) -> AffineMap:
+    """Coalesce the map: drop radix-1 digits and merge adjacent plain
+    output digits whose sources are adjacent input digits — the affine form
+    of ``layout.coalesce`` (asserted equivalent in the property tests).
+    Contiguity run-lengths of the merged map are what the closed-form tile
+    derivation reads."""
+    m = amap
+    changed = True
+    while changed:
+        changed = False
+        skew_into = {k for k in m.skew if k >= 0}
+        # drop radix-1 output digits (and their input digit when full-radix)
+        for j in range(len(m.out_digits)):
+            if (m.out_digits[j] == 1 and j not in skew_into
+                    and m.skew[j] == -1
+                    and m.in_digits[m.src[j]] == 1):
+                m = _drop_digit(m, j)
+                changed = True
+                break
+        if changed:
+            continue
+        # merge j (outer) with j+1 (inner): inner must be plain full-radix
+        for j in range(len(m.out_digits) - 1):
+            d0, d1 = m.src[j], m.src[j + 1]
+            if (
+                d1 == d0 + 1
+                and m.rot[j] == 0 and m.rot[j + 1] == 0
+                and m.skew[j] == -1 and m.skew[j + 1] == -1
+                and j not in skew_into and (j + 1) not in skew_into
+                and m.out_digits[j + 1] == m.in_digits[d1]
+                and m.base[d1] == 0
+            ):
+                m = _merge_pair(m, j)
+                changed = True
+                break
+    return m
+
+
+def _drop_digit(m: AffineMap, j: int) -> AffineMap:
+    """Remove radix-1 output digit ``j`` and its radix-1 input digit."""
+    d = m.src[j]
+
+    def si(i):
+        return i if i < d else i - 1
+
+    keep = [t for t in range(len(m.out_digits)) if t != j]
+    return AffineMap(
+        m.in_digits[:d] + m.in_digits[d + 1:],
+        tuple(m.out_digits[t] for t in keep),
+        tuple(si(m.src[t]) for t in keep),
+        m.base[:d] + m.base[d + 1:],
+        tuple(m.rot[t] for t in keep),
+        tuple(
+            (m.skew[t] if m.skew[t] < j else m.skew[t] - 1)
+            if m.skew[t] != -1 else -1
+            for t in keep
+        ),
+        tuple(m.skew_sign[t] for t in keep),
+    )
+
+
+def _merge_pair(m: AffineMap, j: int) -> AffineMap:
+    """Merge output digits (j, j+1) reading adjacent input digits
+    (d, d+1): one digit of radix ``r_j * r_{j+1}``, outer base scaled."""
+    d = m.src[j]
+    rin = m.in_digits[d] * m.in_digits[d + 1]
+    rout = m.out_digits[j] * m.out_digits[j + 1]
+    in_digits = m.in_digits[:d] + (rin,) + m.in_digits[d + 2:]
+    base = list(m.base[:d] + (m.base[d] * m.in_digits[d + 1],)
+                + m.base[d + 2:])
+
+    def si(i):
+        return i if i <= d else i - 1
+
+    keep = [t for t in range(len(m.out_digits)) if t != j + 1]
+    out_digits, src, rot, skew, sign = [], [], [], [], []
+    for t in keep:
+        out_digits.append(rout if t == j else m.out_digits[t])
+        src.append(si(m.src[t]))
+        rot.append(m.rot[t])
+        s = m.skew[t]
+        skew.append(s if s == -1 or s <= j else s - 1)
+        sign.append(m.skew_sign[t])
+    return AffineMap(in_digits, tuple(out_digits), tuple(src), tuple(base),
+                     tuple(rot), tuple(skew), tuple(sign))
+
+
+@dataclass(frozen=True)
+class AffineExec:
+    """Closed-form execution plan for one recognized map: the (merged) map,
+    the routed mode, the two blocked output digits, and the derived tiles
+    (DESIGN.md §14).  ``mode`` reuses the planner's route names; the new
+    ``affine`` mode is the generalized reorder kernel."""
+
+    amap: AffineMap  # merged form (what the kernel executes)
+    mode: str  # identity | copy | transpose | reorder | affine
+    jr: int | None  # blocked output digit, row side
+    jc: int | None  # blocked output digit, lane side
+    block_r: int
+    block_c: int
+    block_v: int | None
+    exec_shape: tuple[int, ...] | None  # (B, R, C, V) for the swap family
+    grid_order: str
+    resident_skew: bool  # lane digit adjusted in-kernel (diagonal)
+
+
+def derive(amap: AffineMap, dtype_name, grid_order: str = "out") -> AffineExec:
+    """Derive the bandwidth-optimal tiling in closed form (2306.07795):
+    merge contiguity runs, then block the output-fastest run (store side)
+    and the run fed by the input-fastest digit (load side); block sizes
+    come from the same VMEM/alignment arithmetic the heuristic planners
+    use, applied to the run lengths — so for the already-routed permutation
+    class the derivation reproduces the heuristic tile *exactly* (the
+    SAME-object plan identity in core/plan.py relies on this)."""
+    from repro.core import layout  # lazy: layout imports this module
+
+    m = merge_runs(amap)
+    outd, ind = m.out_digits, m.in_digits
+    mo, ni = len(outd), len(ind)
+
+    if m.is_permutation():
+        # the rearrange class: the merged map *is* a (shape, perm) pair —
+        # classify and tile exactly like the heuristic planner route
+        cshape, cperm = ind, m.src
+        if mo <= 1 or cperm == tuple(range(mo)):
+            last = amap.in_digits[-1] if amap.in_digits else 1
+            tp = plan_copy_tiles(max(m.n_in // max(last, 1), 1), last,
+                                 dtype_name)
+            return AffineExec(m, "identity", None, None, tp.block_r,
+                              tp.block_c, None, None, grid_order, False)
+        factors = layout.swap_factors(cshape, cperm)
+        if factors is not None:
+            b, r, c, v = factors
+            if v > 1:
+                vp = plan_transpose_vec_tiles(r, c, v, dtype_name)
+                return AffineExec(m, "transpose", None, None, vp.block_r,
+                                  vp.block_c, vp.block_v, (b, r, c, v),
+                                  grid_order, False)
+            tp = plan_transpose_tiles(r, c, dtype_name)
+            return AffineExec(m, "transpose", None, None, tp.block_r,
+                              tp.block_c, None, (b, r, c, v), grid_order,
+                              False)
+        if cperm[-1] == mo - 1:
+            rows_axis, cols_axis = cperm[-2], mo - 1
+            tp = plan_copy_tiles(cshape[rows_axis], cshape[cols_axis],
+                                 dtype_name)
+            return AffineExec(m, "copy", rows_axis, cols_axis, tp.block_r,
+                              tp.block_c, None, None, grid_order, False)
+        rows_axis, cols_axis = cperm[-1], mo - 1
+        tp = plan_transpose_tiles(cshape[rows_axis], cshape[cols_axis],
+                                  dtype_name)
+        return AffineExec(m, "reorder", rows_axis, cols_axis, tp.block_r,
+                          tp.block_c, None, None, grid_order, False)
+
+    # general affine route: pick the two blockable output digits
+    skew_into = {k for k in m.skew if k >= 0}
+
+    def blockable(j):
+        return m.rot[j] == 0 and m.skew[j] == -1 and j not in skew_into
+
+    if mo == 0:
+        raise ValueError("empty output digit space")
+    jc = mo - 1
+    resident = False
+    if not blockable(jc):
+        d = m.src[jc]
+        full = outd[jc] == ind[d] and m.base[d] == 0
+        if full and jc not in skew_into:
+            # skewed or rotated lane digit: keep it fully resident and let
+            # the kernel apply the modular shift in-register
+            resident = True
+        else:
+            raise ValueError("lane digit not blockable: no affine lowering")
+    copy_like = m.src[jc] == ni - 1 or resident
+
+    def row_ok(j):
+        # a skew *source* digit may still be row-blocked when the lane digit
+        # is resident: the kernel folds its coordinate into per-row shifts
+        if blockable(j):
+            return True
+        return (resident and m.rot[j] == 0 and m.skew[j] == -1
+                and j == m.skew[jc])
+
+    jr = None
+    if not copy_like:
+        jr = next((j for j in range(mo - 1) if m.src[j] == ni - 1
+                   and row_ok(j)), None)
+    if jr is None and mo >= 2 and row_ok(mo - 2) and mo - 2 != jc:
+        jr = mo - 2
+    R = outd[jr] if jr is not None else 1
+    C = outd[jc]
+    if copy_like:
+        tp = plan_copy_tiles(max(R, 1), C, dtype_name)
+    else:
+        tp = plan_transpose_tiles(max(R, 1), C, dtype_name)
+    br = min(tp.block_r, R) if jr is not None else 1
+    bc = C if resident else min(tp.block_c, C)
+    # window bases on blocked digits must ride as whole blocks
+    if jr is not None:
+        br = align_block(br, m.base[m.src[jr]])
+    if not resident:
+        bc = align_block(bc, m.base[m.src[jc]])
+    return AffineExec(m, "affine", jr, jc, br, bc, None, None, grid_order,
+                      resident)

@@ -157,3 +157,38 @@ def canonicalize(shape: Sequence[int], perm: Sequence[int]) -> Canonical:
         r_in = cperm[-2] if n >= 2 else None
         return Canonical("copy", cshape, cperm, r_in, c_in)
     return Canonical("transpose", cshape, cperm, cperm[-1], c_in)
+
+
+# ---------------------------------------------------------------------------
+# affine projections (DESIGN.md §14): canonicalize/swap_factors are views of
+# the affine index-map form — asserted equivalent in tests/test_properties.py
+# ---------------------------------------------------------------------------
+
+
+def to_affine(shape: Sequence[int], perm: Sequence[int]):
+    """Lift a transpose request to its :class:`repro.core.affine.AffineMap`
+    form (the planner's affine IR)."""
+    from repro.core import affine  # lazy: affine lazily imports this module
+
+    return affine.AffineMap.from_perm(tuple(shape), tuple(perm))
+
+
+def affine_canonical(shape: Sequence[int], perm: Sequence[int]) -> Canonical:
+    """:func:`canonicalize` recomputed as a projection of the affine form:
+    lift to an AffineMap, coalesce with ``affine.merge_runs``, then read the
+    movement classification off the merged digits.  The affine merge is
+    strictly stronger than :func:`coalesce` (it re-joins runs separated only
+    by dropped size-1 axes), so the merged shape may be coarser; the *mode*
+    and trailing movement structure agree whenever no size-1 axis splits a
+    mergeable run."""
+    from repro.core import affine  # lazy: affine lazily imports this module
+
+    m = affine.merge_runs(to_affine(shape, perm))
+    cshape, cperm = m.in_digits, m.src
+    n = len(cshape)
+    if n <= 1 or cperm == tuple(range(n)):
+        return Canonical("identity", cshape, cperm, None, None)
+    c_in = n - 1
+    if cperm[-1] == c_in:
+        return Canonical("copy", cshape, cperm, cperm[-2], c_in)
+    return Canonical("transpose", cshape, cperm, cperm[-1], c_in)

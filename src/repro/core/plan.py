@@ -30,13 +30,16 @@ order, never in the computed result.
 from __future__ import annotations
 
 import functools
-from dataclasses import dataclass
+from dataclasses import dataclass, replace
 from typing import Sequence
 
 import jax.numpy as jnp
 
-from repro.core import layout, tune
+from repro.core import affine, layout, tune
 from repro.kernels.tiling import (
+    TilePlan,
+    VecTilePlan,
+    cdiv,
     copy_tile_candidates,
     plan_copy_tiles,
     plan_transpose_tiles,
@@ -58,8 +61,8 @@ class RearrangePlan:
     (collapsed) form, the kernel route, the chosen tiles, and the predicted
     HBM traffic/roofline (DESIGN.md §3)."""
 
-    mode: str  # identity | copy | transpose | reorder
-    kernel: str  # noop | copy | transpose2d_batched[_vec] | reorder_nd
+    mode: str  # identity | copy | transpose | reorder | affine
+    kernel: str  # noop | copy | transpose2d_batched[_vec] | reorder_nd | reorder_affine
     canonical_shape: tuple[int, ...]
     canonical_perm: tuple[int, ...]
     out_shape: tuple[int, ...]  # full-rank output shape
@@ -69,12 +72,18 @@ class RearrangePlan:
     grid_order: str
     bytes_moved: int  # read + write
     roofline_s: float  # bytes / HBM bandwidth (one chip)
+    block_v: int | None = None  # lane-depth tile on the _vec route
+    plan_source: str = "heuristic"  # heuristic | analytic | tuned
+    amap: affine.AffineMap | None = None  # merged map, affine-mode plans
 
     def describe(self) -> str:
         """One-line human-readable summary (benchmarks / debugging)."""
+        tiles = f"tiles=({self.block_r},{self.block_c}"
+        tiles += f",{self.block_v})" if self.block_v is not None else ")"
+        ex = f" exec={self.exec_shape}" if self.exec_shape is not None else ""
         return (
             f"{self.mode}: shape={self.canonical_shape} perm={self.canonical_perm} "
-            f"kernel={self.kernel} tiles=({self.block_r},{self.block_c}) "
+            f"kernel={self.kernel} {tiles}{ex} source={self.plan_source} "
             f"{self.bytes_moved/1e6:.2f} MB moved, "
             f"roofline {self.roofline_s*1e6:.1f} us @ {HBM_GBPS} GB/s"
         )
@@ -102,6 +111,7 @@ def _build_plan(
     bytes_moved = 2 * n_elems * itemsize  # read once + write once
 
     exec_shape = None
+    block_v = None
     factors = None if canon.mode == "identity" else layout.swap_factors(
         canon.shape, canon.perm
     )
@@ -137,6 +147,7 @@ def _build_plan(
             kernel = "transpose2d_batched_vec"
             vp = plan_transpose_vec_tiles(r, c, v, dtype_name)
             br, bc = vp.block_r, vp.block_c
+            block_v = vp.block_v
         else:
             kernel = "transpose2d_batched"
             tp = plan_transpose_tiles(r, c, dtype_name)
@@ -160,6 +171,23 @@ def _build_plan(
         br = block_r
     if block_c is not None:
         bc = block_c
+    source = "heuristic"
+    if block_r is None and block_c is None:
+        # analytic cross-check (DESIGN.md §14): derive the tile in closed
+        # form from the affine lift; when it reproduces the routed tile the
+        # plan is stamped `analytic` (the common case — the derivation uses
+        # the same formulas on the merged run-lengths).  A mismatch (e.g. a
+        # size-1 axis splitting a mergeable run, where the affine merge is
+        # coarser than `coalesce`) keeps the authoritative heuristic stamp;
+        # the plan itself is identical either way.
+        try:
+            ex = affine.derive(layout.to_affine(shape, perm), dtype_name,
+                               grid_order)
+            if (ex.mode == mode and ex.block_r == br and ex.block_c == bc
+                    and ex.block_v == block_v and ex.exec_shape == exec_shape):
+                source = "analytic"
+        except ValueError:
+            pass
     return RearrangePlan(
         mode=mode,
         kernel=kernel,
@@ -172,6 +200,8 @@ def _build_plan(
         grid_order=grid_order,
         bytes_moved=bytes_moved,
         roofline_s=bytes_moved / (HBM_GBPS * 1e9),
+        block_v=block_v,
+        plan_source=source,
     )
 
 
@@ -185,8 +215,10 @@ def _plan_cached(
 def _tile_candidates(
     plan: RearrangePlan, shape: tuple, dtype_name: str, grid_order: str
 ) -> list[tune.Candidate]:
-    """Enumerate the tuner's search space around one routed plan: the tile
-    neighborhood (heuristic first) and, on the ``reorder_nd`` routes, both
+    """Enumerate the tuner's search space around one routed plan: the
+    plan's own tile is the seed (the analytic derivation when the request
+    was affine-recognized, the heuristic otherwise) and only its ±1
+    neighborhood is enumerated — plus, on the ``reorder_nd`` routes, both
     grid-walk orders.  Cost scores include the padded-block traffic and
     grid-step count so the model can separate candidates that move the
     same useful bytes at different granularity."""
@@ -211,7 +243,11 @@ def _tile_candidates(
     if plan.mode == "transpose":
         b, r, c, v = plan.exec_shape
         if v > 1:
-            for vp in vec_tile_candidates(r, c, v, dtype_name):
+            bv = plan.block_v or plan_transpose_vec_tiles(r, c, v, dtype_name).block_v
+            seed_v = VecTilePlan(plan.block_r, plan.block_c, bv,
+                                 cdiv(r, plan.block_r), cdiv(c, plan.block_c),
+                                 cdiv(v, bv))
+            for vp in vec_tile_candidates(r, c, v, dtype_name, seed_v):
                 padded = (
                     b
                     * (vp.grid_r * vp.block_r)
@@ -221,7 +257,9 @@ def _tile_candidates(
                 add(vp.block_r, vp.block_c, grid_order,
                     padded, b * vp.grid_r * vp.grid_c * vp.grid_v)
         else:
-            for tp in transpose_tile_candidates(r, c, dtype_name):
+            seed = TilePlan(plan.block_r, plan.block_c,
+                            cdiv(r, plan.block_r), cdiv(c, plan.block_c))
+            for tp in transpose_tile_candidates(r, c, dtype_name, seed):
                 padded = b * (tp.grid_r * tp.block_r) * (tp.grid_c * tp.block_c)
                 add(tp.block_r, tp.block_c, grid_order,
                     padded, b * tp.grid_r * tp.grid_c)
@@ -231,8 +269,10 @@ def _tile_candidates(
         )
         r, c = _movement_plane(plan)
         batch = max(n_elems // max(r * c, 1), 1)
+        seed = TilePlan(plan.block_r, plan.block_c,
+                        cdiv(r, plan.block_r), cdiv(c, plan.block_c))
         for go in (grid_order, "in" if grid_order == "out" else "out"):
-            for tp in enum(r, c, dtype_name):
+            for tp in enum(r, c, dtype_name, seed):
                 padded = batch * (tp.grid_r * tp.block_r) * (tp.grid_c * tp.block_c)
                 add(tp.block_r, tp.block_c, go, padded, batch * tp.grid_r * tp.grid_c)
     return cands
@@ -293,11 +333,12 @@ def _plan_tuned_cached(
         and d["block_c"] == base.block_c
         and d["grid_order"] == base.grid_order
     ):
-        return base  # heuristic won: tuned and untuned plans are the SAME object
-    return _build_plan(
+        return base  # seed won: tuned and untuned plans are the SAME object
+    out = _build_plan(
         shape, dtype_name, perm, d["grid_order"],
         block_r=d["block_r"], block_c=d["block_c"],
     )
+    return replace(out, plan_source="tuned")
 
 
 def plan_rearrange(
@@ -329,9 +370,182 @@ def plan_rearrange(
     return _plan_tuned_cached(*key, tune.resolve_mode())
 
 
+# ---------------------------------------------------------------------------
+# affine plans (DESIGN.md §14): requests arriving as an AffineMap — the new
+# ops (bit_reversal, strided/diagonal reorder, seeded shuffle) and anything
+# the recognizer lifts.  The tile comes from the closed-form derivation
+# (`affine.derive`), so the plan source is `analytic` by construction; the
+# tuner only *verifies* the seed against its ±1 neighborhood.
+# ---------------------------------------------------------------------------
+
+
+@functools.lru_cache(maxsize=1024)
+def _plan_affine_cached(
+    amap: affine.AffineMap, dtype_name: str, grid_order: str
+) -> RearrangePlan:
+    itemsize = jnp.dtype(dtype_name).itemsize
+    out_shape = tuple(amap.out_digits)
+    n_out = amap.n_out
+    if n_out == 0 or amap.n_in == 0:
+        return RearrangePlan(
+            mode="identity", kernel="noop",
+            canonical_shape=amap.in_digits,
+            canonical_perm=tuple(range(len(amap.in_digits))),
+            out_shape=out_shape, exec_shape=None, block_r=1, block_c=1,
+            grid_order=grid_order, bytes_moved=0, roofline_s=0.0,
+            plan_source="analytic",
+        )
+    ex = affine.derive(amap, dtype_name, grid_order)
+    m = ex.amap
+    bytes_moved = 2 * n_out * itemsize
+    if ex.mode == "transpose":
+        kernel = (
+            "transpose2d_batched_vec" if ex.block_v is not None
+            else "transpose2d_batched"
+        )
+    else:
+        kernel = {
+            "identity": "noop", "copy": "reorder_nd",
+            "reorder": "reorder_nd", "affine": "reorder_affine",
+        }[ex.mode]
+    return RearrangePlan(
+        mode=ex.mode, kernel=kernel,
+        canonical_shape=m.in_digits, canonical_perm=m.src,
+        out_shape=out_shape, exec_shape=ex.exec_shape,
+        block_r=ex.block_r, block_c=ex.block_c, grid_order=grid_order,
+        bytes_moved=bytes_moved, roofline_s=bytes_moved / (HBM_GBPS * 1e9),
+        block_v=ex.block_v, plan_source="analytic",
+        amap=m if ex.mode == "affine" else None,
+    )
+
+
+def _affine_tile_candidates(
+    base: RearrangePlan, dtype_name: str
+) -> list[tune.Candidate]:
+    """The verification neighborhood for an analytic plan: the derived seed
+    ±1 step.  Permutation-class plans reuse the generic enumeration; the
+    ``affine``-mode kernel searches its (jr, jc) plane, with the lane block
+    pinned when the skewed lane digit is resident."""
+    if base.mode != "affine":
+        return _tile_candidates(
+            base, base.canonical_shape, dtype_name, base.grid_order
+        )
+    itemsize = jnp.dtype(dtype_name).itemsize
+    ex = affine.derive(base.amap, dtype_name, base.grid_order)
+    R = base.amap.out_digits[ex.jr] if ex.jr is not None else 1
+    C = base.amap.out_digits[ex.jc]
+    batch = max(base.amap.n_out // max(R * C, 1), 1)
+    seed = TilePlan(base.block_r, base.block_c,
+                    cdiv(R, base.block_r), cdiv(C, base.block_c))
+    enum = copy_tile_candidates if ex.resident_skew else transpose_tile_candidates
+    cands: list[tune.Candidate] = []
+    for tp in enum(R, C, dtype_name, seed):
+        label = f"br{tp.block_r}_bc{tp.block_c}_{base.grid_order}"
+        if any(c.label == label for c in cands):
+            continue
+        padded = batch * (tp.grid_r * tp.block_r) * (tp.grid_c * tp.block_c)
+        cands.append(
+            tune.Candidate(
+                label=label,
+                params=(("block_r", tp.block_r), ("block_c", tp.block_c),
+                        ("grid_order", base.grid_order)),
+                cost_s=movement_cost_s(
+                    2 * padded * itemsize, batch * tp.grid_r * tp.grid_c
+                ),
+            )
+        )
+    return cands
+
+
+def _affine_runner_factory(
+    amap: affine.AffineMap, dtype_name: str, grid_order: str
+):
+    """Measured-mode runner for affine plans (mirrors `_runner_factory`)."""
+
+    def factory(cand: tune.Candidate):
+        import jax
+
+        from repro.kernels import ops  # lazy: ops imports this module
+
+        d = cand.param_dict()
+        base = _plan_affine_cached(amap, dtype_name, d["grid_order"])
+        plan = replace(base, block_r=d["block_r"], block_c=d["block_c"])
+        x = tune.sample_array(base.canonical_shape, dtype_name)
+        fn = jax.jit(lambda a: ops.apply_plan(a, plan))
+        return lambda: fn(x)
+
+    return factory
+
+
+@functools.lru_cache(maxsize=1024)
+def _plan_affine_tuned_cached(
+    amap: affine.AffineMap, dtype_name: str, grid_order: str, mode: str
+) -> RearrangePlan:
+    base = _plan_affine_cached(amap, dtype_name, grid_order)
+    if base.mode == "identity":
+        return base  # nothing to tune: no data moves
+    cands = _affine_tile_candidates(base, dtype_name)
+    key = (
+        f"amap={amap.in_digits}->{amap.out_digits}|src={amap.src}|"
+        f"base={amap.base}|rot={amap.rot}|skew={amap.skew}{amap.skew_sign}|"
+        f"dtype={dtype_name}|go={grid_order}"
+    )
+    choice = tune.select(
+        "rearrange", key, cands,
+        _affine_runner_factory(amap, dtype_name, grid_order), mode=mode,
+    )
+    d = choice.param_dict()
+    if (
+        d["block_r"] == base.block_r
+        and d["block_c"] == base.block_c
+        and d["grid_order"] == base.grid_order
+    ):
+        return base  # analytic seed verified: SAME object as the untuned plan
+    return replace(
+        base, block_r=d["block_r"], block_c=d["block_c"],
+        grid_order=d["grid_order"], plan_source="tuned",
+    )
+
+
+def plan_affine(
+    amap: affine.AffineMap,
+    dtype,
+    *,
+    grid_order: str = "out",
+    tuned: bool | None = None,
+) -> RearrangePlan:
+    """Plan (and cache) the movement for one :class:`~repro.core.affine.AffineMap`.
+
+    The affine analogue of :func:`plan_rearrange`: the map is coalesced
+    (``affine.merge_runs``), classified, and tiled in closed form by
+    :func:`affine.derive` — permutation-class maps land on the existing
+    kernel routes, anything with window bases / rotations / skew lands on
+    the generalized ``reorder_affine`` kernel.  Raises ValueError when the
+    map has no single-pass lowering (callers fall back to their oracle).
+    ``tuned`` resolves like :func:`plan_rearrange`; because the seed is the
+    derivation itself, tuning is a verification pass over its ±1
+    neighborhood.
+    """
+    if not isinstance(amap, affine.AffineMap):
+        raise TypeError(f"plan_affine wants an AffineMap, got {type(amap)}")
+    if grid_order not in ("in", "out"):
+        raise ValueError(f"grid_order must be 'in' or 'out', got {grid_order!r}")
+    if tuned is None:
+        tuned = tune.tune_default()
+    key = (amap, jnp.dtype(dtype).name, grid_order)
+    if not tuned:
+        return _plan_affine_cached(*key)
+    return _plan_affine_tuned_cached(*key, tune.resolve_mode())
+
+
 def plan_cache_info():
     """Expose the memo stats (tests / benchmarks)."""
     return _plan_cached.cache_info()
+
+
+def affine_plan_cache_info():
+    """Expose the affine-path memo stats (tests / benchmarks)."""
+    return _plan_affine_cached.cache_info()
 
 
 def tuned_plan_cache_info():

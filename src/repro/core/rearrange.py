@@ -68,6 +68,35 @@ def transpose(x: Array) -> Array:
 
 
 # ---------------------------------------------------------------------------
+# affine ops (DESIGN.md §14): requests the analytic planner recognizes
+# beyond plain permutations — each ONE kernel pass, no index tables
+# ---------------------------------------------------------------------------
+
+
+def bit_reversal(x: Array, *, axis: int = 0) -> Array:
+    """Bit-reversal reorder along ``axis`` (FFT layouts); the axis length
+    must be a power of two."""
+    return ops.bit_reversal(x, axis=axis)
+
+
+def strided_gather(x: Array, stride: int, *, phase: int = 0, axis: int = 0) -> Array:
+    """Strided window gather ``x[..., phase::stride, ...]`` along ``axis``."""
+    return ops.strided_gather(x, stride, phase=phase, axis=axis)
+
+
+def diagonal_reorder(x: Array) -> Array:
+    """Skewed-diagonal reorder of the trailing plane:
+    ``out[..., i, j] = x[..., i, (i + j) % C]``."""
+    return ops.diagonal_reorder(x)
+
+
+def shuffle(x: Array, seed: int = 0) -> Array:
+    """Table-free seeded bijective row shuffle (epoch shuffling,
+    ROADMAP item 3): same seed, same permutation, no index table in HBM."""
+    return ops.shuffle(x, seed)
+
+
+# ---------------------------------------------------------------------------
 # §III-C interlace / de-interlace (axis-generalized)
 # ---------------------------------------------------------------------------
 

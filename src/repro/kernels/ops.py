@@ -25,8 +25,9 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.core import affine
 from repro.core.index_plan import IndexPlan, plan_index_op
-from repro.core.plan import RearrangePlan, plan_rearrange
+from repro.core.plan import RearrangePlan, plan_affine, plan_rearrange
 from repro.kernels import (
     copy as copy_k,
     gather_scatter as gs_k,
@@ -210,10 +211,21 @@ def apply_plan(x: Array, plan: RearrangePlan) -> Array:
       transpose -> batched 2-D transpose (scalar or V-deep elements)
       copy      -> reorder_nd in row-gather mode on the collapsed form
       reorder   -> generic reorder_nd on the collapsed form
+      affine    -> generalized reorder_affine driven by the plan's AffineMap
     """
     interp = _interpret()
     if plan.mode == "identity":
         return x.reshape(plan.out_shape)
+    if plan.mode == "affine":
+        y = rnd_k.reorder_affine(
+            x.reshape(plan.canonical_shape),
+            plan.amap,
+            block_r=plan.block_r,
+            block_c=plan.block_c,
+            grid_order=plan.grid_order,
+            interpret=interp,
+        )
+        return y.reshape(plan.out_shape)
     if plan.mode == "transpose":
         b, r, c, v = plan.exec_shape
         if v > 1:
@@ -222,6 +234,7 @@ def apply_plan(x: Array, plan: RearrangePlan) -> Array:
                 block_r=plan.block_r,
                 block_c=plan.block_c,
                 interpret=interp,
+                **({"block_v": plan.block_v} if plan.block_v else {}),
             )
         else:
             y = p3_k.transpose2d_batched(
@@ -250,6 +263,83 @@ def permute(x: Array, perm: Sequence[int], *, grid_order: str = "out") -> Array:
         plan = plan_rearrange(x.shape, x.dtype, perm, grid_order=grid_order)
         return apply_plan(x, plan)
     return ref.permute(x, perm)
+
+
+def _apply_affine(x: Array, amap: affine.AffineMap, out_shape) -> Array:
+    """Shared affine-op dispatch: plan the map (analytic source), execute it
+    as ONE kernel pass, and reshape to the user-facing ``out_shape``."""
+    plan = plan_affine(amap, x.dtype)
+    return apply_plan(x, plan).reshape(out_shape)
+
+
+def bit_reversal(x: Array, *, axis: int = 0) -> Array:
+    """Bit-reversal reorder along ``axis`` (FFT layouts, paper's reorder
+    class): element ``i`` moves to bit-reversed index.  Affine route: the
+    axis is digit-split into base-2 digits whose order is reversed — a
+    clean digit permutation, ONE pallas_call, no index table."""
+    axis = axis % max(x.ndim, 1)
+    if use_pallas() and x.size:
+        try:
+            amap = affine.bit_reversal_map(x.shape, axis=axis)
+            return _apply_affine(x, amap, x.shape)
+        except ValueError:
+            pass  # non-power-of-2 axis or unlowerable: oracle fallback
+    return ref.bit_reversal(x, axis=axis)
+
+
+def strided_gather(x: Array, stride: int, *, phase: int = 0, axis: int = 0) -> Array:
+    """Strided window gather ``x[..., phase::stride, ...]`` along ``axis``.
+
+    When ``stride`` divides the axis (and ``phase < stride``) this lowers
+    through the affine planner: the axis digit-splits into
+    ``(n // stride, stride)`` with the stride digit pinned at ``phase`` —
+    a windowed affine map, ONE pallas_call, no materialized slice."""
+    if stride <= 0:
+        raise ValueError(f"stride must be positive, got {stride}")
+    axis = axis % max(x.ndim, 1)
+    if use_pallas() and x.size:
+        try:
+            amap = affine.strided_map(x.shape, axis=axis, stride=stride, phase=phase)
+            out_shape = (
+                x.shape[:axis] + (x.shape[axis] // stride,) + x.shape[axis + 1:]
+            )
+            return _apply_affine(x, amap, out_shape)
+        except ValueError:
+            pass  # stride/phase not digit-splittable: oracle fallback
+    return ref.strided_gather(x, stride, phase=phase, axis=axis)
+
+
+def diagonal_reorder(x: Array) -> Array:
+    """Skewed-diagonal reorder ``out[..., i, j] = x[..., i, (i + j) % C]``
+    (the paper's diagonal block walk applied to the data).  The affine
+    lowering keeps the lane digit resident and applies the per-row modular
+    shift in-register — ONE pallas_call, no gather table."""
+    if x.ndim < 2:
+        raise ValueError("diagonal_reorder wants rank >= 2")
+    if use_pallas() and x.size:
+        try:
+            return _apply_affine(x, affine.diagonal_map(x.shape), x.shape)
+        except ValueError:
+            pass
+    return ref.diagonal_reorder(x)
+
+
+def shuffle(x: Array, seed: int = 0) -> Array:
+    """Table-free seeded row shuffle (axis 0) — the epoch-shuffling
+    primitive (ROADMAP item 3; bijective index functions per Mitchell et
+    al., arXiv:2106.06161).  The seed draws a mixed-radix digit permutation
+    plus per-digit rotations over the row index space: a bijection the
+    affine planner lowers as ONE pallas_call with the row map evaluated in
+    the scalar core — no O(n) index table in HBM.  The same seed always
+    yields the same permutation; the oracle path materializes it as a
+    gather table instead."""
+    if use_pallas() and x.size and x.ndim >= 1 and x.shape[0] > 1:
+        try:
+            amap = affine.shuffle_map(x.shape[0], payload=x.shape[1:], seed=seed)
+            return _apply_affine(x, amap, x.shape)
+        except ValueError:
+            pass
+    return ref.shuffle(x, seed=seed)
 
 
 def reorder_nm(

@@ -123,6 +123,58 @@ def reorder_nm(
     return moved.reshape(tuple(sizes[ax] for ax in perm))
 
 
+def bit_reversal(x: Array, *, axis: int = 0) -> Array:
+    """Bit-reversal reorder along ``axis`` (FFT layouts): element ``i`` moves
+    to the index whose base-2 digits are ``i``'s reversed.  The axis length
+    must be a power of two."""
+    n = x.shape[axis]
+    if n & (n - 1):
+        raise ValueError(f"bit_reversal axis length {n} is not a power of 2")
+    bits = max(n.bit_length() - 1, 0)
+    i = jnp.arange(n)
+    rev = jnp.zeros_like(i)
+    for b in range(bits):
+        rev = rev | (((i >> b) & 1) << (bits - 1 - b))
+    return jnp.take(x, rev, axis=axis)
+
+
+def strided_gather(x: Array, stride: int, *, phase: int = 0, axis: int = 0) -> Array:
+    """Strided slice ``x[..., phase::stride, ...]`` along ``axis`` (the
+    affine window/stride class)."""
+    if stride <= 0:
+        raise ValueError(f"stride must be positive, got {stride}")
+    idx = jnp.arange(phase, x.shape[axis], stride)
+    return jnp.take(x, idx, axis=axis)
+
+
+def diagonal_reorder(x: Array) -> Array:
+    """Skewed-diagonal reorder of the trailing plane:
+    ``out[..., i, j] = x[..., i, (i + j) % C]`` (the paper's diagonal block
+    walk applied to the data itself — cyclically shift row ``i`` left by
+    ``i``)."""
+    if x.ndim < 2:
+        raise ValueError("diagonal_reorder wants rank >= 2")
+    rows, cols = x.shape[-2], x.shape[-1]
+    i = jnp.arange(rows)[:, None]
+    j = jnp.arange(cols)[None, :]
+    idx = jnp.broadcast_to((i + j) % max(cols, 1), x.shape[-2:])
+    return jnp.take_along_axis(x, jnp.broadcast_to(idx, x.shape), axis=-1)
+
+
+def shuffle(x: Array, seed: int = 0) -> Array:
+    """Seeded bijective row shuffle along axis 0: the same mixed-radix
+    digit-permute + per-digit-rotation bijection the table-free Pallas
+    route lowers (``affine.shuffle_map``), materialized here as one gather
+    through the map's index table."""
+    from repro.core import affine  # lazy: keep ref importable standalone
+
+    n = x.shape[0]
+    if n <= 1:
+        return x + jnp.zeros((), x.dtype)
+    amap = affine.shuffle_map(n, seed=seed)
+    return jnp.take(x, jnp.asarray(amap.index_vector()), axis=0)
+
+
 # ---------------------------------------------------------------------------
 # §III-C  interlace / de-interlace
 # ---------------------------------------------------------------------------

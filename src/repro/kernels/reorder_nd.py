@@ -39,6 +39,7 @@ from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
 from repro.kernels.tiling import (
+    align_block,
     cdiv,
     force_interpret,
     plan_copy_tiles,
@@ -74,9 +75,7 @@ def _movement_axes(perm: tuple[int, ...]) -> tuple[int | None, int, bool]:
 def _align_block(block: int, offset: int) -> int:
     """Largest block <= ``block`` (by halving) that divides ``offset``, so a
     window base can ride in the index map as a whole number of blocks."""
-    while offset % block:
-        block = max(1, block // 2)
-    return block
+    return align_block(block, offset)
 
 
 def _reorder_call(
@@ -206,6 +205,171 @@ def permute_nd(
     return _reorder_call(
         x, perm, (0,) * N, x.shape, br, bc, r_in, c_in, grid_order, interpret
     )
+
+
+def _affine_body(perm_axes, out_block, rshift, x_ref, o_ref):
+    """Kernel body for the affine route: reorder the loaded block into the
+    output digit order, then (diagonal maps) apply the per-row modular lane
+    shift while the lane digit is fully resident."""
+    blk = jnp.transpose(x_ref[...], perm_axes).reshape(out_block)
+    if rshift is not None:
+        C, rot, sign, kind, weight, radix, br = rshift
+        rows = max(blk.size // C, 1)
+        plane = blk.reshape(rows, C)
+        if kind == "row":
+            coord = pl.program_id(1) * br + lax.broadcasted_iota(
+                jnp.int32, (rows, 1), 0
+            )
+        else:  # batch digit: one coordinate per grid step
+            coord = lax.rem(pl.program_id(0) // weight, radix)
+        col = lax.broadcasted_iota(jnp.int32, (rows, C), 1)
+        src_col = jnp.mod(col + rot + sign * coord, C)
+        plane = jnp.take_along_axis(plane, src_col, axis=1)
+        blk = plane.reshape(out_block)
+    o_ref[...] = blk
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("amap", "block_r", "block_c", "grid_order", "interpret"),
+)
+def reorder_affine(
+    x: jax.Array,
+    amap,
+    *,
+    block_r: int | None = None,
+    block_c: int | None = None,
+    grid_order: str = "out",
+    interpret: bool | None = None,
+) -> jax.Array:
+    """Generalized reorder driven by an :class:`repro.core.affine.AffineMap`:
+    ONE pallas_call computing ``out[o] = in[A·o + b]`` over mixed-radix
+    digit spaces (window bases, per-digit rotations, and the diagonal skew).
+
+    The map's closed-form derivation (``affine.derive``) picks the two
+    blocked output digits; every other digit walks the batch grid with the
+    per-digit mod-affine arithmetic evaluated *in the scalar core* inside
+    the BlockSpec index_map — the affine generalization of ``permute_nd``'s
+    mixed-radix decomposition, still zero memory traffic for metadata.  A
+    skewed lane digit stays fully resident and is shifted in-kernel
+    (`take_along_axis` over the lane axis).  Raises ValueError when the map
+    has no single-pass lowering; dispatch falls back to the oracle."""
+    from repro.core import affine as af  # lazy: affine imports tiling only
+
+    ex = af.derive(amap, x.dtype, grid_order)
+    m = ex.amap
+    if m.n_out == 0 or m.n_in == 0:
+        return jnp.zeros(m.out_digits, x.dtype)
+    if ex.mode != "affine":
+        # permutation class: the merged map is a plain (shape, perm) pair
+        return permute_nd(
+            x.reshape(m.in_digits), m.src,
+            block_r=block_r or ex.block_r, block_c=block_c or ex.block_c,
+            grid_order=grid_order, interpret=interpret,
+        ).reshape(amap.out_digits)
+    x = x.reshape(m.in_digits)
+    outd, ind = m.out_digits, m.in_digits
+    mo, ni = len(outd), len(ind)
+    jr, jc = ex.jr, ex.jc
+    R = outd[jr] if jr is not None else 1
+    C = outd[jc]
+    br = align_block(min(block_r or ex.block_r, R),
+                     m.base[m.src[jr]]) if jr is not None else 1
+    if ex.resident_skew:
+        bc = C  # lane digit fully resident (shifted in-kernel)
+    else:
+        bc = align_block(min(block_c or ex.block_c, C), m.base[m.src[jc]])
+
+    batch = [j for j in range(mo) if j != jr and j != jc]
+    if grid_order == "in":
+        batch.sort(key=lambda j: m.src[j])
+    elif grid_order != "out":
+        raise ValueError(f"grid_order must be 'in' or 'out', got {grid_order!r}")
+    # the skew source of every *batch* digit must itself be decodable from
+    # the grid step: another batch digit, or a blocked digit at unit block
+    for j in batch:
+        k = m.skew[j]
+        if k == jr and br != 1 or k == jc and bc != 1:
+            raise ValueError("batch digit skewed off a blocked digit")
+    gweights: dict[int, int] = {}
+    w = 1
+    for j in reversed(batch):
+        gweights[j] = w
+        w *= outd[j]
+    G = w
+
+    def coord(jdig, g, i, j):
+        if jdig == jr:
+            return i  # exact: br == 1 when used as a skew source
+        if jdig == jc:
+            return j
+        return lax.rem(g // gweights[jdig], outd[jdig])
+
+    def in_map(g, i, j):
+        c = [m.base[d] for d in range(ni)]  # unmapped digits: pinned, block 1
+        for jd in range(mo):
+            d = m.src[jd]
+            if jd == jr:
+                c[d] = i + m.base[d] // br
+            elif jd == jc:
+                c[d] = 0 if ex.resident_skew else j + m.base[d] // bc
+            else:
+                o = coord(jd, g, i, j) + m.rot[jd]
+                if m.skew[jd] >= 0:
+                    o = o + m.skew_sign[jd] * coord(m.skew[jd], g, i, j)
+                r = outd[jd]
+                c[d] = m.base[d] + lax.rem(lax.rem(o, r) + r, r)
+        return tuple(c)
+
+    def out_map(g, i, j):
+        return tuple(
+            i if jd == jr else j if jd == jc else coord(jd, g, i, j)
+            for jd in range(mo)
+        )
+
+    in_block = [1] * ni
+    if jr is not None:
+        in_block[m.src[jr]] = br
+    in_block[m.src[jc]] = C if ex.resident_skew else bc
+    out_block = [1] * mo
+    if jr is not None:
+        out_block[jr] = br
+    out_block[jc] = C if ex.resident_skew else bc
+
+    # in-block axes -> output digit order (trailing axes are unit window /
+    # pinned digits, absorbed by the reshape)
+    perm_axes = [m.src[jd] for jd in range(mo)]
+    perm_axes += [d for d in range(ni) if d not in perm_axes]
+
+    rshift = None
+    if ex.resident_skew:
+        k0 = m.skew[jc]
+        if k0 == -1:  # rotation only: constant lane shift
+            rshift = (C, m.rot[jc], 0, "batch", 1, 1, br)
+        elif k0 == jr or k0 in gweights:
+            kind = "row" if k0 == jr else "batch"
+            rshift = (
+                C, m.rot[jc], m.skew_sign[jc], kind,
+                gweights.get(k0, 1), outd[k0], br,
+            )
+        else:
+            raise ValueError("lane digit skewed off an undecodable digit")
+
+    interpret = force_interpret() if interpret is None else interpret
+    params = _dim_semantics(3)
+    kwargs = {"compiler_params": params} if params is not None else {}
+    out = pl.pallas_call(
+        functools.partial(
+            _affine_body, tuple(perm_axes), tuple(out_block), rshift
+        ),
+        grid=(G, cdiv(R, br) if jr is not None else 1, cdiv(C, bc)),
+        in_specs=[pl.BlockSpec(tuple(in_block), in_map)],
+        out_specs=pl.BlockSpec(tuple(out_block), out_map),
+        out_shape=jax.ShapeDtypeStruct(outd, x.dtype),
+        interpret=interpret,
+        **kwargs,
+    )(x)
+    return out.reshape(amap.out_digits)
 
 
 @functools.partial(

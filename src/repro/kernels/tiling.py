@@ -133,6 +133,15 @@ def plan_transpose_vec_tiles(rows: int, cols: int, vec: int, dtype) -> VecTilePl
     )
 
 
+def shrink_rows(br: int, bc: int, max_elems: int, sl: int) -> int:
+    """Halve the row block until the (br, bc) buffer fits ``max_elems``,
+    clamped at the ``sl`` sublane floor: plain halving can land below it
+    (bf16 sl=16 with br=24 -> 12), producing an unaligned row block."""
+    while br * bc > max_elems and br > sl:
+        br = max(sl, br // 2)
+    return br
+
+
 def plan_copy_tiles(rows: int, cols: int, dtype, *, target_rows: int = 512) -> TilePlan:
     """Tile a streaming (rows, cols) copy: cols stay full-width when they
     fit the budget (long contiguous DMAs), rows are blocked."""
@@ -143,9 +152,18 @@ def plan_copy_tiles(rows: int, cols: int, dtype, *, target_rows: int = 512) -> T
     br = max(sl, min(round_up(target_rows, sl), max_elems // max(bc, 1)))
     if br > rows:
         br = rows
-    while br * bc > max_elems and br > sl:
-        br //= 2
+    br = shrink_rows(br, bc, max_elems, sl)
     return TilePlan(br, bc, cdiv(rows, br), cdiv(cols, bc))
+
+
+def align_block(block: int, offset: int) -> int:
+    """Largest block size <= ``block`` that divides evenly into ``offset``
+    (halving search, floor 1).  Used when a window base offset must land on
+    a block boundary so the BlockSpec index_map stays exact."""
+    b = max(block, 1)
+    while offset % b != 0:
+        b //= 2
+    return max(b, 1)
 
 
 def force_interpret() -> bool:
@@ -181,13 +199,16 @@ def neighborhood(value: int, mult: int, dim: int) -> tuple[int, ...]:
     return tuple(out)
 
 
-def transpose_tile_candidates(rows: int, cols: int, dtype) -> tuple[TilePlan, ...]:
-    """Tile candidates for the transpose plane: the heuristic
-    (:func:`plan_transpose_tiles`) first, then its (block_r, block_c)
-    neighborhood, keeping only VMEM-legal combinations (both the load and
-    store blocks double-buffered)."""
+def transpose_tile_candidates(
+    rows: int, cols: int, dtype, seed: TilePlan | None = None
+) -> tuple[TilePlan, ...]:
+    """Tile candidates for the transpose plane: the ``seed`` tile first
+    (the analytic derivation when the planner recognized the request as
+    affine, else the :func:`plan_transpose_tiles` heuristic), then its
+    (block_r, block_c) ±1 neighborhood, keeping only VMEM-legal
+    combinations (both the load and store blocks double-buffered)."""
     itemsize = jnp.dtype(dtype).itemsize
-    base = plan_transpose_tiles(rows, cols, dtype)
+    base = seed if seed is not None else plan_transpose_tiles(rows, cols, dtype)
     mr = LANES if rows >= LANES else sublanes(dtype)
     mc = LANES if cols >= LANES else sublanes(dtype)
     out = []
@@ -202,15 +223,16 @@ def transpose_tile_candidates(rows: int, cols: int, dtype) -> tuple[TilePlan, ..
 
 
 def vec_tile_candidates(
-    rows: int, cols: int, vec: int, dtype
+    rows: int, cols: int, vec: int, dtype, seed: VecTilePlan | None = None
 ) -> tuple[VecTilePlan, ...]:
-    """Tile candidates for the V-deep transpose plane: the heuristic
-    (:func:`plan_transpose_vec_tiles`) first, then the (block_r, block_c)
-    neighborhood at the heuristic's ``block_v`` (the lane-axis depth is
-    fixed by payload contiguity, so only the plane tile is searched)."""
+    """Tile candidates for the V-deep transpose plane: the ``seed`` tile
+    first (analytic derivation or the :func:`plan_transpose_vec_tiles`
+    heuristic), then the (block_r, block_c) neighborhood at the seed's
+    ``block_v`` (the lane-axis depth is fixed by payload contiguity, so
+    only the plane tile is searched)."""
     itemsize = jnp.dtype(dtype).itemsize
     sl = sublanes(dtype)
-    base = plan_transpose_vec_tiles(rows, cols, vec, dtype)
+    base = seed if seed is not None else plan_transpose_vec_tiles(rows, cols, vec, dtype)
     budget_elems = max(VMEM_BUDGET // (2 * itemsize), 1)
     plane_budget = max(budget_elems // max(base.block_v, 1), 1)
     out = []
@@ -227,13 +249,16 @@ def vec_tile_candidates(
     return tuple(out) or (base,)
 
 
-def copy_tile_candidates(rows: int, cols: int, dtype) -> tuple[TilePlan, ...]:
+def copy_tile_candidates(
+    rows: int, cols: int, dtype, seed: TilePlan | None = None
+) -> tuple[TilePlan, ...]:
     """Tile candidates for the streaming-copy plane: columns stay full
     width (the long contiguous DMAs are the point of the route), only the
-    row-block height is searched around :func:`plan_copy_tiles`."""
+    row-block height is searched around the ``seed`` tile (analytic
+    derivation or the :func:`plan_copy_tiles` heuristic)."""
     itemsize = jnp.dtype(dtype).itemsize
     sl = sublanes(dtype)
-    base = plan_copy_tiles(rows, cols, dtype)
+    base = seed if seed is not None else plan_copy_tiles(rows, cols, dtype)
     max_elems = VMEM_BUDGET // (2 * itemsize)
     out = []
     for br in neighborhood(base.block_r, sl, rows):

@@ -54,6 +54,32 @@ def _warm_config(name: str, batch: int, seq: int) -> list[str]:
             f"[{plan.mode}]"
         )
 
+    # the affine family (DESIGN.md §14): the seeded epoch shuffle over the
+    # config's token stream and the bit-reversal layout over the head dim —
+    # warming these covers the reorder_affine route the new ops dispatch to
+    from repro.core import affine
+    from repro.core.plan import plan_affine
+
+    t = batch * seq
+    shuf = affine.shuffle_map(t, payload=(cfg.d_model,), seed=0)
+    plan = plan_affine(shuf, dt, tuned=True)
+    lines.append(
+        f"{name}: shuffle ({t}, {cfg.d_model}) -> "
+        f"tiles=({plan.block_r},{plan.block_c}) "
+        f"[{plan.mode}/{plan.plan_source}]"
+    )
+    try:
+        rev = affine.bit_reversal_map((t, hd), axis=1)
+    except ValueError:
+        pass  # non-power-of-two head dim: the op has no affine lowering
+    else:
+        plan = plan_affine(rev, dt, tuned=True)
+        lines.append(
+            f"{name}: bit_reversal ({t}, {hd}) -> "
+            f"tiles=({plan.block_r},{plan.block_c}) "
+            f"[{plan.mode}/{plan.plan_source}]"
+        )
+
     if cfg.moe is not None:
         from repro.models.moe import default_capacity
 

@@ -120,3 +120,96 @@ def test_kernel_matches_oracle_property(perm):
     np.testing.assert_array_equal(
         np.asarray(got), np.transpose(np.asarray(x), perm)
     )
+
+
+# ---------------------------------------------------------------------------
+# affine recognizer / planner properties (DESIGN.md §14)
+# ---------------------------------------------------------------------------
+
+from repro.core import affine  # noqa: E402  (after hypothesis importorskip)
+
+
+@given(shapes_and_perms)
+def test_affine_lift_matches_transpose(sp):
+    """recognize -> materialize -> oracle equality: the affine lift of any
+    (shape, perm) gathers exactly like jnp.transpose."""
+    shape, perm = sp
+    amap = layout.to_affine(shape, perm)
+    x = np.arange(int(np.prod(shape))).reshape(shape)
+    want = np.transpose(x, perm).ravel()
+    np.testing.assert_array_equal(x.ravel()[amap.index_vector()], want)
+
+
+@given(shapes_and_perms)
+def test_affine_compose_invert_identity(sp):
+    """compose . invert == identity on the permutation class."""
+    shape, perm = sp
+    amap = layout.to_affine(shape, perm)
+    ident = amap.compose(amap.invert())
+    np.testing.assert_array_equal(
+        ident.index_vector(), np.arange(amap.n_in)
+    )
+
+
+@given(shapes_and_perms)
+def test_affine_canonical_agrees_with_canonicalize(sp):
+    """canonicalize is a projection of the affine form: same mode; when no
+    size-1 axis splits a mergeable run the merged shapes agree exactly (the
+    affine merge is strictly stronger across dropped size-1 axes)."""
+    shape, perm = sp
+    canon = layout.canonicalize(shape, perm)
+    acanon = layout.affine_canonical(shape, perm)
+    if 1 not in shape:
+        assert acanon.mode == canon.mode
+        assert acanon.shape == canon.shape
+        assert acanon.perm == canon.perm
+        assert acanon.rows_axis == canon.rows_axis
+        assert acanon.cols_axis == canon.cols_axis
+    else:
+        assert int(np.prod(acanon.shape)) == int(np.prod(canon.shape))
+        if acanon.mode != "identity":
+            assert canon.mode != "identity"
+
+
+@given(st.integers(2, 4096), st.integers(0, 2**31 - 1))
+def test_shuffle_map_bijection_roundtrip(n, seed):
+    """Seeded shuffle maps are bijections; compose . invert == identity and
+    the recognizer recovers an equivalent map from the bare index vector."""
+    amap = affine.shuffle_map(n, seed=seed)
+    iv = amap.index_vector()
+    assert sorted(iv.tolist()) == list(range(n))
+    ident = amap.compose(amap.invert())
+    np.testing.assert_array_equal(ident.index_vector(), np.arange(n))
+    rec = affine.recognize_index_vector(iv)
+    assert rec is not None
+    np.testing.assert_array_equal(rec.index_vector(), iv)
+
+
+@given(st.integers(4, 512), st.integers(0, 2**31 - 1))
+def test_recognizer_refuses_non_affine(n, seed):
+    """Non-affine requests are refused to the generic route: a random
+    transposition almost never stays per-digit separable, and whenever the
+    recognizer does accept, its map must reproduce the vector exactly."""
+    rng = np.random.default_rng(seed)
+    idx = np.arange(n)
+    a, b = rng.integers(0, n, size=2)
+    idx[a], idx[b] = idx[b], idx[a]
+    rec = affine.recognize_index_vector(idx)
+    if rec is not None:  # accepted: must be exact (a==b or an affine swap)
+        np.testing.assert_array_equal(rec.index_vector(), idx)
+    # a non-permutation vector is always refused
+    if n > 1:
+        bad = np.arange(n)
+        bad[0] = bad[1]
+        assert affine.recognize_index_vector(bad) is None
+
+
+@given(shapes_and_perms)
+def test_plan_source_stamp(sp):
+    """Every plan carries a plan_source stamp; shapes without size-1 axes
+    must derive analytically (closed-form tile == routed tile)."""
+    shape, perm = sp
+    plan = plan_rearrange(shape, jnp.float32, perm)
+    assert plan.plan_source in ("heuristic", "analytic")
+    if 1 not in shape:
+        assert plan.plan_source == "analytic"
